@@ -1,0 +1,113 @@
+"""Shared benchmark utilities: timing + a small CIM-evaluated classifier.
+
+The classifier stands in for the paper's CIFAR-10/ResNet-20 pipeline (no
+datasets in this offline container): an MLP trained in float on a synthetic
+Gaussian-cluster task, then evaluated with every matmul routed through the
+simulated PICO-RAM macro. Accuracy deltas across schemes / ADC bits / PVT
+corners reproduce the paper's TRENDS (Figs. 1b, 10, 18, 19); absolute
+CIFAR numbers are out of scope offline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CIMConfig, MacroConfig, cim_matmul
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time per call in microseconds (results blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+# ---------------------------------------------------------------------------
+# synthetic classification task evaluated on the simulated macro
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class TaskData:
+    x_train: jax.Array
+    y_train: jax.Array
+    x_test: jax.Array
+    y_test: jax.Array
+
+
+def make_task(n_classes=16, dim=64, n_train=4096, n_test=1024, seed=0):
+    key = jax.random.PRNGKey(seed)
+    centers = jax.random.normal(key, (n_classes, dim)) * 1.5
+
+    def sample(k, n):
+        ky, kx = jax.random.split(k)
+        y = jax.random.randint(ky, (n,), 0, n_classes)
+        x = centers[y] + jax.random.normal(kx, (n, dim))
+        return jax.nn.relu(x), y  # non-negative activations (paper's case)
+
+    xtr, ytr = sample(jax.random.fold_in(key, 1), n_train)
+    xte, yte = sample(jax.random.fold_in(key, 2), n_test)
+    return TaskData(xtr, ytr, xte, yte)
+
+
+def train_mlp(task: TaskData, hidden=144, steps=300, seed=0):
+    """Plain float training; CIM enters only at evaluation (PTQ deployment,
+    the harder case than QAT — trends match the paper's)."""
+    key = jax.random.PRNGKey(seed + 100)
+    dim = task.x_train.shape[1]
+    n_classes = int(task.y_train.max()) + 1
+    params = {
+        "w1": jax.random.normal(key, (dim, hidden)) / np.sqrt(dim),
+        "w2": jax.random.normal(jax.random.fold_in(key, 1),
+                                (hidden, n_classes)) / np.sqrt(hidden),
+    }
+
+    def logits_fn(p, x):
+        h = jax.nn.relu(x @ p["w1"])
+        return h @ p["w2"]
+
+    def loss_fn(p):
+        lg = logits_fn(p, task.x_train)
+        return jnp.mean(-jax.nn.log_softmax(lg)[jnp.arange(lg.shape[0]),
+                                                task.y_train])
+
+    @jax.jit
+    def step(p, m):
+        g = jax.grad(loss_fn)(p)
+        m = jax.tree.map(lambda mm, gg: 0.9 * mm + gg, m, g)
+        return jax.tree.map(lambda pp, mm: pp - 0.05 * mm, p, m), m
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    for _ in range(steps):
+        params, m = step(params, m)
+    return params
+
+
+def eval_accuracy(params, task: TaskData, macro: MacroConfig | None,
+                  key=None) -> float:
+    """Test accuracy with matmuls on the simulated macro (None = float)."""
+    if macro is None:
+        h = jax.nn.relu(task.x_test @ params["w1"])
+        lg = h @ params["w2"]
+    else:
+        cfg = CIMConfig(enabled=True, macro=macro)
+        k1 = k2 = None
+        if key is not None:
+            k1, k2 = jax.random.split(key)
+        h = jax.nn.relu(cim_matmul(task.x_test, params["w1"], cfg, key=k1))
+        lg = cim_matmul(h, params["w2"], cfg, key=k2)
+    return float(jnp.mean((jnp.argmax(lg, -1) == task.y_test)))

@@ -1,0 +1,45 @@
+"""Fig. 21: energy efficiency and clock frequency over 0.65–1.2 V, plus the
+DAC's sparsity-dependent energy share (paper: 2.4–14.6 %)."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PROTOTYPE
+from repro.core.dac import dac_energy_j
+from repro.core.energy import macro_throughput_gops, mvm_energy
+from repro.core.macro import OperatingPoint
+
+from .common import row
+
+
+def run():
+    out = []
+    t0 = time.perf_counter()
+    for vdd in (0.65, 0.75, 0.9, 1.05, 1.2):
+        m = dataclasses.replace(PROTOTYPE, op=OperatingPoint(vdd=vdd))
+        rep = mvm_energy(m, 144)
+        out.append(row(f"fig21_vdd{vdd:g}", (time.perf_counter() - t0) * 1e6,
+                       f"TOPSW={rep.tops_per_w:.1f}|"
+                       f"fclk_MHz={m.clock_hz() / 1e6:.1f}|"
+                       f"GOPS={macro_throughput_gops(m):.1f}"))
+
+    # DAC energy share across input sparsity (zero codes charge nothing)
+    key = jax.random.PRNGKey(0)
+    for sparsity in (0.0, 0.5, 0.9):
+        codes = jax.random.randint(key, (4096,), 0, 16).astype(jnp.float32)
+        mask = jax.random.uniform(jax.random.fold_in(key, 1),
+                                  (4096,)) >= sparsity
+        codes = codes * mask
+        e_dac = float(dac_energy_j(codes, PROTOTYPE))  # one group conversion
+        e_tot = mvm_energy(PROTOTYPE, 144).e_mvm_j
+        share = e_dac / (e_tot + e_dac)
+        out.append(row(f"fig21_dac_sparsity{sparsity:g}",
+                       (time.perf_counter() - t0) * 1e6,
+                       f"dac_share={share * 100:.1f}%"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Fig. 7 (shift-and-add linearity, weight sweep) and Fig. 9 (end-to-end
+input-sweep linearity). Paper: R² = 0.9999 for both.
+
+Fig. 7 protocol: same input everywhere, sweep the stored 4-bit weight value;
+output must be linear in the weight code.
+Fig. 9 protocol: all-ones weights, sweep the DAC input code.
+"""
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import PROTOTYPE
+from repro.core.macro import SimLevel
+from repro.core.schemes import bp_mvm
+
+from .common import row
+
+
+def _r2(x, y):
+    x = np.asarray(x, np.float64)
+    y = np.asarray(y, np.float64)
+    a, b = np.polyfit(x, y, 1)
+    resid = y - (a * x + b)
+    return 1.0 - resid.var() / y.var()
+
+
+def run():
+    out = []
+    t0 = time.perf_counter()
+    macro = dataclasses.replace(PROTOTYPE, sim_level=SimLevel.FULL)
+
+    # Fig. 7: weight sweep at fixed input
+    xs = jnp.full((1, 144), 9.0)
+    ys = []
+    for wcode in range(16):
+        w = jnp.full((144, 1), float(wcode))
+        ys.append(float(bp_mvm(xs, w, macro)[0, 0]))
+    r2_w = _r2(np.arange(16), ys)
+    out.append(row("fig7_shiftadd_weight_sweep",
+                   (time.perf_counter() - t0) * 1e6, f"R2={r2_w:.6f}"))
+
+    # Fig. 9: input sweep with all-ones-equivalent weights (max code 15)
+    w = jnp.full((144, 1), 15.0)
+    codes, outs = [], []
+    for xcode in range(16):
+        x = jnp.full((1, 144), float(xcode))
+        codes.append(xcode)
+        outs.append(float(bp_mvm(x, w, macro)[0, 0]))
+    r2_x = _r2(codes, outs)
+    out.append(row("fig9_end_to_end_input_sweep",
+                   (time.perf_counter() - t0) * 1e6, f"R2={r2_x:.6f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

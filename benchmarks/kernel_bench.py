@@ -1,0 +1,40 @@
+"""cim_mvm Pallas kernel micro-bench: interpret-mode wall time vs the jnp
+reference across tile shapes (structural check — real perf is a TPU matter,
+the §Perf roofline reasons from the lowered IR)."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.macro import MacroConfig
+from repro.kernels.ops import cim_mvm_pallas
+from repro.kernels.ref import cim_mvm_ref
+
+from .common import row, timeit
+
+
+def run():
+    out = []
+    cfg = MacroConfig()
+    key = jax.random.PRNGKey(0)
+    m, k, n = 256, 1152, 256  # 8 macro groups deep
+    x = jax.random.randint(key, (m, k), 0, 16).astype(jnp.float32)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (k, n), 0,
+                           16).astype(jnp.float32)
+
+    ref = jax.jit(lambda a, b: cim_mvm_ref(a, b, n_rows=cfg.n_rows,
+                                           levels=cfg.adc_levels,
+                                           gain=cfg.gain,
+                                           full_scale=cfg.full_scale()))
+    us_ref = timeit(ref, x, w)
+    out.append(row("kernel_ref_jnp_1152x256", us_ref, "oracle"))
+    for bm, bn in ((64, 64), (128, 128), (256, 256)):
+        fn = lambda a, b: cim_mvm_pallas(a, b, cfg, bm=bm, bn=bn)
+        us = timeit(fn, x, w)
+        out.append(row(f"kernel_pallas_bm{bm}_bn{bn}", us,
+                       f"interpret_mode|vs_ref={us / max(us_ref, 1e-9):.2f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only fig2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (fig1b_schemes, fig2_sqnr, fig7_9_linearity, fig10_adc_bits,
+               fig15_17_transfer, fig16_noise, fig18_pvt, fig19_inference,
+               fig21_energy, kernel_bench, table1_summary)
+
+MODULES = [
+    ("fig1b", fig1b_schemes), ("fig2", fig2_sqnr), ("fig7_9", fig7_9_linearity),
+    ("fig10", fig10_adc_bits), ("fig15_17", fig15_17_transfer),
+    ("fig16", fig16_noise), ("fig18", fig18_pvt), ("fig19", fig19_inference),
+    ("fig21", fig21_energy), ("table1", table1_summary),
+    ("kernel", kernel_bench),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on the bench name")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""HLO text parsing: collective-op byte accounting.
+
+cost_analysis() has FLOPs and touched bytes but NOT collective traffic;
+per the brief we parse the (post-partitioning, per-device SPMD) HLO text and
+sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+
+Optimized HLO spells operands as bare %names, so this is a two-pass parse:
+(1) symbol table of every instruction's result shape(s); (2) per collective
+line, resolve operand names against the table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(([^)]*)\)")
+_NAME_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes_of(text: str) -> int:
+    """Total bytes of all dtype[shape] tokens in `text` (tuples sum)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective op (per-device program)."""
+    # pass 1: result shapes — the shape expression right after "name ="
+    sizes: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # result shape = everything before the opcode word; just take the
+        # first shape-ish prefix (tuple or single shape)
+        if rhs.startswith("("):
+            end = rhs.find(")")
+            sizes[name] = _shape_bytes_of(rhs[:end + 1])
+        else:
+            sm = _SHAPE_RE.match(rhs)
+            sizes[name] = _shape_bytes_of(sm.group(0)) if sm else 0
+
+    bytes_by: dict[str, int] = defaultdict(int)
+    count_by: dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind, phase, args = m.group(1), m.group(2), m.group(3)
+        if phase == "-done":  # the -start already carried the operands
+            continue
+        inline = _shape_bytes_of(args)
+        if inline:
+            total = inline
+        else:
+            total = sum(sizes.get(nm, 0) for nm in _NAME_RE.findall(args))
+        bytes_by[kind] += total
+        count_by[kind] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))

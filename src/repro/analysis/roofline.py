@@ -1,0 +1,135 @@
+"""Three-term roofline analysis from the compiled dry-run artifact.
+
+    compute   = HLO_FLOPs      / (chips × 197 TFLOP/s bf16)
+    memory    = HLO_bytes      / (chips × 819 GB/s HBM)
+    collective= collective_B   / (chips × 50 GB/s/link ICI)
+
+plus MODEL_FLOPS = 6·N·D (train, dense) / 6·N_active·D (MoE) / 2·N·D
+(inference) and the useful-compute ratio MODEL_FLOPS / HLO_FLOPs that
+catches remat/dispatch/quantization waste.
+
+HLO_FLOPs/bytes come from compiled.cost_analysis(); cost_analysis totals are
+whole-program (all chips), so both are divided by the chip count. Collective
+bytes come from analysis.hlo parsing of the partitioned module (per-chip
+already, since the module is the per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12      # TPU v5e-class bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link per chip
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    collective_bytes: float
+    model_flops: float
+    peak_bytes_per_chip: float
+    collective_detail: dict
+
+    # NOTE: compiled.cost_analysis() on the partitioned module reports the
+    # PER-DEVICE program (verified against a hand-computed matmul), so
+    # hlo_flops / hlo_bytes / collective_bytes are all per-chip already;
+    # model_flops is global and is divided by chips where compared.
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def wire_bytes(self) -> float:
+        """Physical per-chip link traffic: ring all-reduce moves ≈2× its
+        operand bytes ((n−1)/n reduce-scatter + (n−1)/n all-gather); AG / RS /
+        A2A / permute move ≈1× the operand."""
+        detail = (self.collective_detail or {}).get("bytes", {})
+        if not detail:
+            return self.collective_bytes
+        total = 0.0
+        for kind, b in detail.items():
+            total += (2.0 if kind == "all-reduce" else 1.0) * b
+        return total
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        if not self.hlo_flops:
+            return 0.0
+        return self.model_flops / self.chips / self.hlo_flops
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the step ran at the
+        bound implied by the dominant term: useful_FLOPs/chip/step_time over
+        peak. This is the score-bearing number in EXPERIMENTS.md §Perf."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_bound <= 0:
+            return 0.0
+        return (self.model_flops / self.chips / t_bound) / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips, "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "wire_bytes": self.wire_bytes,
+            "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "peak_bytes_per_chip": self.peak_bytes_per_chip,
+            "collective_detail": self.collective_detail,
+        }
+
+
+def count_params(abstract_params) -> int:
+    import jax
+    return sum(int(x.size) for x in jax.tree.leaves(abstract_params))
+
+
+def count_active_params(abstract_params, cfg) -> float:
+    """MoE-aware active parameter count for MODEL_FLOPS."""
+    import jax
+    total = routed = 0
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(abstract_params)[0]:
+        path = [getattr(k, "key", str(k)) for k in kp]
+        total += int(leaf.size)
+        if path[-1] in ("e_gate", "e_up", "e_down"):
+            routed += int(leaf.size)
+    if cfg.moe is None or routed == 0:
+        return float(total)
+    frac = cfg.moe.top_k / cfg.moe.n_experts
+    return float(total - routed + routed * frac)
+
+
+def model_flops(cfg, shape, abstract_params) -> float:
+    n_active = count_active_params(abstract_params, cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,125 @@
+"""Mesh-independent, atomic, keep-N checkpointing.
+
+Design points for the 1000+ node posture:
+  * checkpoints are written UNSHARDED per leaf (host-gathered numpy), so a
+    run can resume on a different device count / mesh shape — elastic
+    scaling and shrink-on-failure both reduce to "load with new shardings";
+  * writes are atomic (tmp dir + rename) so a preemption mid-write never
+    corrupts the latest checkpoint;
+  * keep-N retention, newest-first recovery, and a JSON index carrying step,
+    dtype map (bf16 is stored as uint16 views — npz has no bf16) and user
+    metadata (e.g. data-pipeline step for exact resume).
+
+At real multi-host scale the host-gather becomes per-host shard files; the
+manager API (save/restore/latest_step) is the stable surface.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {jax.tree_util.keystr(kp): leaf for kp, leaf in flat}
+
+
+def save_pytree(path: str, tree, *, metadata: dict | None = None) -> None:
+    """Atomically write `tree` to `path` (a directory)."""
+    tmp = path + f".tmp.{os.getpid()}.{int(time.time() * 1e6)}"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for i, (k, v) in enumerate(sorted(flat.items())):
+        a = np.asarray(jax.device_get(v))
+        dtypes[k] = str(a.dtype)
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)
+        arrays[f"a{i}"] = a
+    keys = [k for k, _ in sorted(flat.items())]
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump({"keys": keys, "dtypes": dtypes,
+                   "metadata": metadata or {}}, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+
+
+def load_pytree(path: str, like, *, shardings=None):
+    """Load into the structure of `like` (arrays or ShapeDtypeStructs).
+
+    shardings: optional matching pytree of NamedSharding — leaves are
+    device_put with them (elastic reshard onto the current mesh).
+    """
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    arrays = {k: data[f"a{i}"] for i, k in enumerate(index["keys"])}
+
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    shard_flat = None
+    if shardings is not None:
+        shard_flat = jax.tree_util.tree_flatten(
+            shardings, is_leaf=lambda x: x is None)[0]
+    for j, (kp, leaf) in enumerate(flat_like[0]):
+        k = jax.tree_util.keystr(kp)
+        if k not in arrays:
+            raise KeyError(f"checkpoint missing leaf {k}")
+        a = arrays[k]
+        want = jnp.dtype(leaf.dtype)
+        if index["dtypes"][k] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        a = a.astype(want) if a.dtype != want else a
+        if a.shape != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {k}: ckpt {a.shape} vs "
+                             f"model {leaf.shape}")
+        sh = shard_flat[j] if shard_flat is not None else None
+        leaves.append(jax.device_put(a, sh) if sh is not None
+                      else jnp.asarray(a))
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    return tree, index["metadata"]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.count(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree, *, metadata: dict | None = None) -> None:
+        md = dict(metadata or {})
+        md["step"] = step
+        save_pytree(self._step_dir(step), tree, metadata=md)
+        for old in self.steps()[:-self.keep]:
+            shutil.rmtree(self._step_dir(old), ignore_errors=True)
+
+    def restore(self, like, *, step: int | None = None, shardings=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return load_pytree(self._step_dir(step), like, shardings=shardings)

@@ -1,0 +1,103 @@
+"""Dual-threshold time-domain ADC behavioural model (paper §IV).
+
+The physical chain — VTC discharge of the combined slice capacitance, folding
+flash TDC on a shared 8-phase RO, dual-threshold power gating — is abstracted
+to its measured input/output behaviour:
+
+    code = clip( round( v/LSB + INL(v) + ε_thermal ), 0, levels−1 )
+
+with LSB set by the full scale / (gain × levels) (macro.adc_lsb), a smooth
+bounded INL curve (Fig. 15: ±1.10 LSB end-to-end), and Gaussian thermal noise
+(Fig. 16a: σ ≈ 0.4 LSB RMS). All of it differentiates through via STE so the
+same model runs inside CIM-aware QAT.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .macro import MacroConfig, SimLevel
+from .quant import clip_ste, round_ste
+
+
+def inl_curve(code_frac: jax.Array, amp_lsb: float, seed: int = 0) -> jax.Array:
+    """Deterministic smooth INL profile in LSB as a function of code ∈ [0,1].
+
+    Shape matches the measured transfer (Fig. 15): a cubic bow that peaks at
+    the range ends (worst-case |INL| ≈ amp) with a small mid-range ripple —
+    the bound is ±1.10 LSB but the code-averaged rms is ≈ amp/√7 ≈ 0.42,
+    which together with the 0.4-LSB thermal term reproduces the measured
+    total σ_E = 0.59 (Fig. 16b). `seed` picks a different instance (used by
+    the Fig. 18 process-variation bench to emulate 8 MVM groups / 5 chips).
+    """
+    import numpy as np
+
+    rng = np.random.RandomState(seed * 7919 + 13)
+    sign = 1.0 if rng.rand() < 0.5 else -1.0
+    ripple_w = 0.12 * rng.randn(2)
+    ph = rng.uniform(0, 2 * np.pi, size=2)
+    scale = 0.85 + 0.15 * rng.rand()  # instance-to-instance spread (Fig. 18)
+    u = 2.0 * code_frac - 1.0
+    x = code_frac * (2 * jnp.pi)
+    curve = sign * u ** 3 + ripple_w[0] * jnp.sin(2 * x + ph[0]) \
+        + ripple_w[1] * jnp.sin(3 * x + ph[1])
+    # analytic bound |curve| ≤ 1 + |r1| + |r2| → normalize, then budget the
+    # amplitude between the smooth bow and a high-frequency per-code term
+    # (the TDC's local layout mismatch → the measured ±0.5-LSB DNL, Fig. 15)
+    # so the total stays within the ±amp_lsb INL bound.
+    curve = curve / (1.0 + abs(float(ripple_w[0])) + abs(float(ripple_w[1])))
+    jit_amp = min(0.24, 0.2 * amp_lsb)
+    jitter = jit_amp * jnp.sin(code_frac * 12289.0 + ph[0]) \
+        * jnp.sin(code_frac * 5741.0 + ph[1])
+    return (amp_lsb - jit_amp) * scale * curve + jitter
+
+
+def adc_quantize(v_analog: jax.Array, cfg: MacroConfig, *,
+                 key: jax.Array | None = None,
+                 act_bits_active: int | None = None,
+                 weight_bits_active: int | None = None,
+                 inl_seed: int = 0,
+                 dequantize: bool = True) -> jax.Array:
+    """Quantize analog MAC values through the TD-ADC transfer curve.
+
+    v_analog is in "integer MAC units" (Σ W̃·X over ≤ N rows). Returns either
+    the reconstructed analog value (code × LSB — what the digital side uses
+    for shift-and-add / partial-sum accumulation) or the raw code.
+    STE rounding keeps the op differentiable for QAT.
+    """
+    levels = cfg.effective_adc_levels()
+    # codes 0..levels−1 span exactly [0, FS/gain]: LSB = FS/(gain·(levels−1))
+    lsb = cfg.full_scale(act_bits_active, weight_bits_active) \
+        / (cfg.gain * (levels - 1))
+    x = v_analog / lsb
+
+    if cfg.sim_level != SimLevel.IDEAL:
+        if cfg.sim_level == SimLevel.FULL:
+            x = x + inl_curve(jnp.clip(x / levels, 0.0, 1.0), cfg.inl_amp_lsb, inl_seed)
+            sigma = cfg.sigma_thermal()
+        else:
+            sigma = cfg.sigma_thermal_lsb
+        if key is not None:
+            x = x + sigma * jax.random.normal(key, x.shape, dtype=x.dtype)
+
+    code = clip_ste(round_ste(x), 0.0, float(levels - 1))
+    return code * lsb if dequantize else code
+
+
+def adc_energy_j(cfg: MacroConfig, *, dual_threshold: bool = True) -> float:
+    """Energy of one TD-ADC conversion (behavioural, calibrated).
+
+    TD-ADC energy scales ~linearly with quantization levels (paper §II-C /
+    Walden). The dual-threshold comparator power-gates the main path for a
+    measured 55.8 % reduction (§IV). Absolute scale is anchored so that the
+    full Eq. 4 macro model reproduces 40.2 TOPS/W @ 0.65 V (see energy.py).
+    """
+    from .energy import E_MAC_REF_J, VOLT_REF, energy_voltage_scale
+
+    # Eq. 4 anchor: E_ADC/(N·E_MAC) = 3.0 at 7-bit, N = 144.
+    e_adc_7b = 3.0 * 144 * E_MAC_REF_J
+    levels = cfg.effective_adc_levels()
+    e = e_adc_7b * (levels / 128.0)
+    if dual_threshold:
+        e *= (1.0 - 0.558)
+    return e * energy_voltage_scale(cfg.op.vdd) / energy_voltage_scale(VOLT_REF)

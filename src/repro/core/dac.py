@@ -1,0 +1,60 @@
+"""In-situ capacitive DAC behavioural model (paper §III-C).
+
+The C-DAC reuses the cluster MOM capacitors as a two-phase capacitive voltage
+divider (16/8/4/2 clusters per column group encode the 4 input bits), so:
+
+  * it is buffer-free and PVT-insensitive (pure charge redistribution) — in
+    the simulation the DAC transfer is exactly linear;
+  * its energy is *input-sparsity aware*: a capacitor is only charged when
+    the corresponding input bit is 1 (measured 2.4 %–14.6 % of macro energy).
+
+Functionally the DAC is the activation quantizer (quant.quantize_act); this
+module adds the energy/statistics model used by benchmarks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .macro import MacroConfig
+
+
+def dac_codes(x_q: jax.Array) -> jax.Array:
+    """Identity transfer: codes in [0, 2^B_A − 1] → ideal analog levels.
+
+    The in-situ C-DAC's linearity comes from capacitor matching (R² = 0.9999,
+    Fig. 9); mismatch is folded into the end-to-end INL model in adc.py, as
+    the paper's own end-to-end measurement does (Fig. 15).
+    """
+    return x_q
+
+
+def dac_switched_cap_fraction(x_q: jax.Array, cfg: MacroConfig) -> jax.Array:
+    """Fraction of DAC capacitance charged for given codes ∈ [0, qmax].
+
+    Bit b switches a capacitor bank proportional to 2^b (16/8/4/2 clusters).
+    Zero inputs charge nothing → energy ∝ popcount-weighted code value.
+    """
+    qi = x_q.astype(jnp.int32)
+    weights = jnp.array([2 ** b for b in range(cfg.act_bits)], dtype=jnp.float32)
+    bits = jnp.stack([(qi >> b) & 1 for b in range(cfg.act_bits)], -1).astype(jnp.float32)
+    frac = (bits @ weights) / float(cfg.act_qmax)
+    return frac
+
+
+def dac_energy_j(x_q: jax.Array, cfg: MacroConfig) -> jax.Array:
+    """DAC energy for one group conversion (all N row DACs), given the code
+    statistics in x_q.
+
+    Anchored so the DAC share of total group energy spans the measured
+    2.4 %–14.6 % between sparse (90 % zeros) and dense inputs
+    (benchmarks/fig21_energy.py checks this).
+    """
+    from .energy import E_MAC_REF_J, VOLT_REF, energy_voltage_scale
+
+    # per-row full-code charge ≈ 2.4× one MAC event (the DAC charges the
+    # same in-situ C_MOM set through the two-phase redistribution)
+    e_row_full = 2.4 * E_MAC_REF_J
+    scale = energy_voltage_scale(cfg.op.vdd) / energy_voltage_scale(VOLT_REF)
+    mean_frac = jnp.mean(dac_switched_cap_fraction(x_q, cfg))
+    return cfg.n_rows * mean_frac * e_row_full * scale

@@ -1,0 +1,58 @@
+"""Precision extension: higher-precision MVM on the 4-bit macro (paper §V:
+"the macro completes 4-bit analog MVM in a single clock cycle, yet can
+support higher precision by leveraging the peripheral digital serial
+processing [26], [28]").
+
+An 8-bit × 8-bit MVM decomposes into nibbles:
+    X = 16·X_hi + X_lo,  W̃ = 16·W̃_hi + W̃_lo   (all nibbles ∈ [0,15])
+    Σ X W̃ = Σ_{i,j} 16^{i+j} · Q( X_i · W̃_j )
+i.e. four bit-parallel analog passes + digital shift-and-add — the nibble
+analogue of WBS/BS, but each pass retains the full 4b×4b BP efficiency.
+Signed 8-bit weights use the Eq. 7 offset with o = 128.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .macro import MacroConfig
+from .schemes import bp_mvm, signed_correction
+
+
+def split_nibbles(codes: jax.Array):
+    """8-bit unsigned codes → (hi, lo) 4-bit nibbles."""
+    ci = codes.astype(jnp.int32)
+    return (ci >> 4).astype(codes.dtype), (ci & 15).astype(codes.dtype)
+
+
+def extended_mvm_codes(x_codes8: jax.Array, w_codes8: jax.Array,
+                       cfg: MacroConfig, *, key=None) -> jax.Array:
+    """ŷ ≈ Σ X̃·W̃ for 8-bit unsigned codes via 4 nibble passes on the
+    4-bit macro. x [..., K], w [K, M]."""
+    xh, xl = split_nibbles(x_codes8)
+    wh, wl = split_nibbles(w_codes8)
+    out = 0.0
+    for i, xi in ((1, xh), (0, xl)):
+        for j, wj in ((1, wh), (0, wl)):
+            kk = None if key is None else jax.random.fold_in(key, i * 2 + j)
+            out = out + (16.0 ** (i + j)) * bp_mvm(xi, wj, cfg, key=kk)
+    return out
+
+
+def extended_matmul(x: jax.Array, w: jax.Array, cfg: MacroConfig, *,
+                    key=None) -> jax.Array:
+    """Float 8b×8b CIM matmul: affine 8-bit activations (zero-point folded
+    into the digital correction), symmetric signed 8-bit weights."""
+    xs = jax.lax.stop_gradient(x)
+    span = jnp.maximum(jnp.max(xs) - jnp.minimum(jnp.min(xs), 0.0), 1e-8)
+    s_x = span / 255.0
+    zp = jnp.round(jnp.clip(-jnp.min(xs) / s_x, 0, 255))
+    x_codes = jnp.clip(jnp.round(x / s_x) + zp, 0, 255)
+
+    amax = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    s_w = amax / 127.0
+    w_codes = jnp.clip(jnp.round(w / s_w), -128, 127) + 128.0
+
+    y = extended_mvm_codes(x_codes, w_codes, cfg, key=key)
+    y = signed_correction(y, x_codes, w_codes, w_offset=128, x_zero_point=zp)
+    return y * s_x * s_w

@@ -1,0 +1,127 @@
+"""Quantizers and straight-through estimators (STE) for CIM-aware arithmetic.
+
+The paper stores 4-bit weights (signed, offset-encoded per Eq. 7) and drives
+4-bit DAC activations. Training uses the standard STE (Eq. 5); the whole point
+of bit-parallel CIM (paper §II-B) is that ONE extra quantization step — the
+ADC — is inserted into the normal QAT flow, with no bit-level gradient
+surgery (GSTE) needed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def round_ste(x: jax.Array) -> jax.Array:
+    """round() with a straight-through gradient (Eq. 5: d round(x)/dx := 1)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def clip_ste(x: jax.Array, lo, hi) -> jax.Array:
+    """clip() whose gradient is 1 inside AND outside the range (pure STE).
+
+    We deliberately pass gradients through the clip (rather than zeroing them
+    outside the range) to match the paper's STE (Eq. 5) where the derivative
+    of the full quantizer is taken as identity.
+    """
+    return x + jax.lax.stop_gradient(jnp.clip(x, lo, hi) - x)
+
+
+def fake_quant_unsigned(x: jax.Array, bits: int, scale: jax.Array) -> jax.Array:
+    """Fake-quantize to unsigned `bits` levels with STE: x ≈ scale * q."""
+    qmax = (1 << bits) - 1
+    q = clip_ste(round_ste(x / scale), 0.0, float(qmax))
+    return q * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class ActQuantConfig:
+    """Activation (DAC input) quantizer — asymmetric affine to u4 codes."""
+
+    bits: int = 4
+    # Calibration percentile mapped to full scale. The paper exploits the
+    # same slack through the VTC gain knob (Fig. 15): activations rarely fill
+    # the full analog range, so amplifying by `gain` reduces quantization
+    # error at the cost of clipping the tail.
+    clip_percentile: float = 1.0
+
+    @property
+    def qmax(self) -> int:
+        return (1 << self.bits) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightQuantConfig:
+    """Weight quantizer — symmetric signed 4-bit, offset-encoded (Eq. 7)."""
+
+    bits: int = 4
+    per_channel: bool = False  # per-output-channel scales (beyond-paper knob)
+
+    @property
+    def qmax(self) -> int:  # +7 for 4-bit
+        return (1 << (self.bits - 1)) - 1
+
+    @property
+    def qmin(self) -> int:  # -8 for 4-bit
+        return -(1 << (self.bits - 1))
+
+    @property
+    def offset(self) -> int:  # Eq. 7: W̃ = W + 8 ∈ [0, 15]
+        return 1 << (self.bits - 1)
+
+
+def act_scale(x: jax.Array, cfg: ActQuantConfig) -> jax.Array:
+    """Dynamic per-tensor affine activation scale: (max − min) / qmax.
+
+    For non-negative (post-ReLU) activations — the paper's case — min = 0 and
+    this reduces to max/qmax with zero point 0. Production QAT would use
+    calibrated static scales; dynamic range keeps examples self-contained.
+    stop_gradient: scales are not trained.
+    """
+    xs = jax.lax.stop_gradient(x)
+    span = jnp.maximum(jnp.max(xs) - jnp.minimum(jnp.min(xs), 0.0), 1e-8)
+    return span / cfg.qmax
+
+
+def weight_scale(w: jax.Array, cfg: WeightQuantConfig) -> jax.Array:
+    """Symmetric weight scale; per-channel reduces over all but last dim."""
+    if cfg.per_channel:
+        amax = jnp.max(jnp.abs(w), axis=tuple(range(w.ndim - 1)), keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w))
+    amax = jnp.maximum(amax, 1e-8)
+    return jax.lax.stop_gradient(amax / cfg.qmax)
+
+
+def quantize_act(x: jax.Array, scale: jax.Array, cfg: ActQuantConfig):
+    """x → (u4 DAC codes, zero_point).
+
+    Affine/asymmetric: q = clip(round(x/s) + z, 0, 15). The zero point folds
+    into the digital correction path exactly like Eq. 7's weight offset — see
+    `schemes.signed_correction`. For non-negative x (post-ReLU, the paper's
+    case) z = 0 and this reduces to the paper's unsigned DAC codes.
+    """
+    zp = jnp.round(jnp.clip(-jnp.min(jax.lax.stop_gradient(x)) / scale, 0, cfg.qmax))
+    q = clip_ste(round_ste(x / scale) + zp, 0.0, float(cfg.qmax))
+    return q, zp
+
+
+def quantize_weight(w: jax.Array, scale: jax.Array, cfg: WeightQuantConfig):
+    """w → unsigned stored codes W̃ ∈ [0, 2^b-1] per the paper's Eq. 7 mapping."""
+    q_signed = clip_ste(round_ste(w / scale), float(cfg.qmin), float(cfg.qmax))
+    return q_signed + cfg.offset
+
+
+def bit_planes(q: jax.Array, bits: int) -> jax.Array:
+    """Decompose unsigned integer codes into `bits` binary planes.
+
+    Returns shape (bits,) + q.shape, plane p holding bit p (LSB first).
+    Used by the BS / WBS baselines (Eq. 2) where each plane is a separate
+    analog MAC pass.
+    """
+    qi = q.astype(jnp.int32)
+    planes = [(qi >> p) & 1 for p in range(bits)]
+    return jnp.stack(planes, axis=0).astype(q.dtype)

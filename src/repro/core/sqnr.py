@@ -1,0 +1,111 @@
+"""Monte-Carlo SQNR analysis of CIM schemes (paper §II-A, Eq. 3, Fig. 2).
+
+Reproduces the paper's semi-empirical study: W, X are 4-bit integers sampled
+from a truncated Gaussian; y = Σ W X over K = R·R·C elements; ŷ follows the
+exact per-scheme computing flow including partial-sum accumulation across
+macros when K > N; SQNR = Σ y² / Σ (y − ŷ)².
+
+Circuit components are assumed ideal (SimLevel.IDEAL) — the study isolates
+quantization effects, as the paper does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .energy import mvm_energy
+from .macro import MacroConfig, Scheme, SimLevel
+from .schemes import cim_mvm_codes, exact_mvm_codes, signed_correction
+
+
+def sample_truncated_gaussian_codes(key: jax.Array, shape, bits: int,
+                                    signed: bool) -> jax.Array:
+    """4-bit integers from a truncated Gaussian, as the paper samples W, X.
+
+    Signed codes span [-2^(b-1), 2^(b-1)-1]; unsigned [0, 2^b - 1]. σ is a
+    third of the half-range so the distribution is meaningfully bell-shaped
+    but the tails are exercised.
+    """
+    if signed:
+        lo, hi = -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+        sigma = hi / 1.5
+        g = jax.random.truncated_normal(key, lo / sigma, hi / sigma, shape) * sigma
+    else:
+        hi = (1 << bits) - 1
+        mean, sigma = hi / 2.0, hi / 3.0
+        lo_t, hi_t = (0 - mean) / sigma, (hi - mean) / sigma
+        g = jax.random.truncated_normal(key, lo_t, hi_t, shape) * sigma + mean
+    return jnp.round(g)
+
+
+@dataclasses.dataclass(frozen=True)
+class SqnrResult:
+    sqnr_db: float
+    energy_per_mvm_j: float
+    tops_per_w: float
+
+
+@partial(jax.jit, static_argnames=("cfg", "k", "batch", "signed_weights"))
+def _sqnr_batch(key: jax.Array, cfg: MacroConfig, k: int, batch: int,
+                signed_weights: bool):
+    kx, kw, kn = jax.random.split(key, 3)
+    x = sample_truncated_gaussian_codes(kx, (batch, k), cfg.act_bits,
+                                        signed=False)
+    if signed_weights:
+        w_signed = sample_truncated_gaussian_codes(kw, (k, 1),
+                                                   cfg.weight_bits, signed=True)
+        offset = 1 << (cfg.weight_bits - 1)
+        w_codes = w_signed + offset
+    else:
+        w_codes = sample_truncated_gaussian_codes(kw, (k, 1), cfg.weight_bits,
+                                                  signed=False)
+        offset = 0
+
+    noise_key = kn if cfg.sim_level != SimLevel.IDEAL else None
+    y_hat = cim_mvm_codes(x, w_codes, cfg, key=noise_key)
+    y_ref = exact_mvm_codes(x, w_codes)
+    if offset:
+        zp = jnp.zeros(())
+        y_hat = signed_correction(y_hat, x, w_codes, w_offset=offset,
+                                  x_zero_point=zp)
+        y_ref = signed_correction(y_ref, x, w_codes, w_offset=offset,
+                                  x_zero_point=zp)
+    return jnp.sum(y_ref ** 2), jnp.sum((y_ref - y_hat) ** 2)
+
+
+def simulate_sqnr(cfg: MacroConfig, *, k: int = 144, n_samples: int = 1 << 16,
+                  batch: int = 1 << 12, seed: int = 0,
+                  signed_weights: bool = True,
+                  dual_threshold: bool = False) -> SqnrResult:
+    """Monte-Carlo SQNR (Eq. 3) + Eq. 4 energy for one hardware config.
+
+    dual_threshold defaults to False here: the paper's §II-A analysis uses the
+    E_ADC/(N·E_MAC) = 3.0 ratio measured on CAP-RAM [28] (no dual-threshold
+    gating); with it, BP/WBS/BS at levels 1024/256/32 are exactly iso-energy,
+    as Fig. 2(b) assumes. PICO-RAM's own macro metrics use True.
+    """
+    sig = err = 0.0
+    key = jax.random.PRNGKey(seed)
+    for i in range(max(1, n_samples // batch)):
+        s, e = _sqnr_batch(jax.random.fold_in(key, i), cfg, k, batch,
+                           signed_weights)
+        sig += float(s)
+        err += float(e)
+    sqnr_db = 10.0 * jnp.log10(sig / jnp.maximum(err, 1e-12))
+    rep = mvm_energy(cfg, k, dual_threshold=dual_threshold)
+    return SqnrResult(sqnr_db=float(sqnr_db), energy_per_mvm_j=rep.e_mvm_j,
+                      tops_per_w=rep.tops_per_w)
+
+
+def sweep(base: MacroConfig, axis: str, values, **kw) -> list[tuple]:
+    """Sweep one MacroConfig field (paper Fig. 2a: n_rows; Fig. 2b: adc_levels)
+    for each scheme; returns (scheme, value, SqnrResult) tuples."""
+    out = []
+    for scheme in (Scheme.BP, Scheme.WBS, Scheme.BS):
+        for v in values:
+            cfg = dataclasses.replace(base, scheme=scheme, **{axis: v})
+            out.append((scheme.value, v, simulate_sqnr(cfg, **kw)))
+    return out

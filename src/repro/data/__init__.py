@@ -1,0 +1,3 @@
+from .tokens import SyntheticLMDataset, synthetic_batch
+
+__all__ = ["SyntheticLMDataset", "synthetic_batch"]

@@ -1,0 +1,82 @@
+"""Deterministic synthetic data pipelines.
+
+Offline environment → no real corpora. The LM stream is a learnable-structure
+synthetic language (orderly Markov-ish sequences with motifs) so training
+loss meaningfully decreases; batches are derived purely from (seed, step,
+host_id) so the pipeline is elastic: any host count / any restart step
+reproduces the identical global batch — the property checkpoint-restart
+tests rely on (no data-loader state to snapshot).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class SyntheticLMDataset:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_hosts: int = 1
+    host_id: int = 0
+    motif_len: int = 8
+    n_motifs: int = 64
+
+    def __post_init__(self):
+        rng = np.random.RandomState(self.seed)
+        v = max(4, self.vocab - 1)
+        self.motifs = rng.randint(1, v, size=(self.n_motifs, self.motif_len))
+
+    @property
+    def host_batch(self) -> int:
+        assert self.global_batch % self.n_hosts == 0
+        return self.global_batch // self.n_hosts
+
+    def batch(self, step: int) -> dict:
+        """→ {"tokens": [B_host, S], "labels": [B_host, S]} int32 numpy."""
+        rng = np.random.RandomState(
+            (self.seed * 1_000_003 + step) * 977 + self.host_id)
+        b, s = self.host_batch, self.seq_len
+        seq = np.zeros((b, s + 1), np.int64)
+        pos = np.zeros(b, np.int64)
+        while pos.min() < s + 1:
+            ids = rng.randint(0, self.n_motifs, size=b)
+            for i in range(b):
+                if pos[i] >= s + 1:
+                    continue
+                m = self.motifs[ids[i]]
+                take = min(self.motif_len, s + 1 - pos[i])
+                seq[i, pos[i]:pos[i] + take] = m[:take]
+                pos[i] += take
+        seq = seq % self.vocab
+        return {"tokens": seq[:, :-1].astype(np.int32),
+                "labels": seq[:, 1:].astype(np.int32)}
+
+
+def synthetic_batch(cfg: ModelConfig, shape: ShapeConfig, step: int = 0,
+                    seed: int = 0) -> dict:
+    """One concrete batch matching registry.input_specs (incl. stub fronts)."""
+    import jax.numpy as jnp
+
+    ds = SyntheticLMDataset(cfg.vocab, shape.seq_len, shape.global_batch,
+                            seed=seed)
+    base = ds.batch(step)
+    out = {"tokens": jnp.asarray(base["tokens"]),
+           "labels": jnp.asarray(base["labels"])}
+    rng = np.random.RandomState(seed + 17)
+    if cfg.n_image_tokens:
+        t = shape.seq_len - cfg.n_image_tokens
+        out = {"tokens": out["tokens"][:, :t], "labels": out["labels"][:, :t]}
+        out["image_embeds"] = jnp.asarray(
+            rng.randn(shape.global_batch, cfg.n_image_tokens,
+                      cfg.d_model).astype(np.float32) * 0.02, jnp.bfloat16)
+    if cfg.encoder_layers:
+        out["frames"] = jnp.asarray(
+            rng.randn(shape.global_batch, cfg.encoder_len,
+                      cfg.d_model).astype(np.float32) * 0.02, jnp.bfloat16)
+    return out

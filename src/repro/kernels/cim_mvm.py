@@ -1,0 +1,150 @@
+"""Fused bit-parallel CIM MVM Pallas TPU kernel.
+
+TPU adaptation of the paper's "in-situ" insight (§III-A): PICO-RAM never
+moves analog partials off the local MOM capacitors between MAC, shift-and-add
+and ADC sampling. The TPU analogue: never spill pre-ADC partial sums to HBM.
+Each grid step along the reduction axis processes exactly one N=144-row macro
+group on the MXU and applies the ADC transfer (clip + round to the 8.5-bit
+grid with VTC gain) in VMEM registers before accumulating into the output
+block — the digital partial-sum accumulation of §II-A.
+
+Layout choices (TPU v5e target):
+  * grid = (M/bm, N/bn, G): the two output axes are parallel, the group axis
+    is sequential ("arbitrary") and innermost so the f32 output block stays
+    resident in VMEM across all G groups (revisiting it per group would
+    round-trip HBM — the exact failure the paper's in-situ design avoids).
+  * The K-block equals the macro depth n_rows = 144. The MXU pads the
+    contraction to sublane multiples; we keep the physical group size rather
+    than rounding to 128 so the simulated numerics are bit-faithful to the
+    macro (padding rows hold zero codes = unselected SRAM rows).
+  * bm/bn default to 128×128 MXU-aligned output tiles; VMEM footprint per
+    step ≈ bm·144·4 + 144·bn·4 + bm·bn·4 ≈ 213 KB ≪ 16 MB, leaving room for
+    the pipeline's double buffering.
+
+The kernel is deterministic (SimLevel.IDEAL transfer). Stochastic error
+injection (thermal noise / INL) belongs to QAT experiments and runs on the
+jnp backends; a production TPU deployment would never inject noise at
+inference time.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _cim_mvm_kernel(x_ref, w_ref, o_ref, *, inv_lsb: float, lsb: float,
+                    levels: int, n_groups: int):
+    """One (bm × bn) output tile; sequential loop over macro groups."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Analog MAC: charge accumulation over one 144-row group (exact/linear).
+    part = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    # TD-ADC transfer: VTC gain + clip + round onto the 8.5-bit code grid.
+    code = jnp.clip(jnp.round(part * inv_lsb), 0.0, float(levels - 1))
+    # Digital partial-sum accumulation (the ×LSB reconstruction).
+    o_ref[...] += code * lsb
+
+
+def _cim_mvm_packed_kernel(x_ref, w_ref, o_ref, *, inv_lsb: float, lsb: float,
+                           levels: int):
+    """Packed-int4 variant: w_ref holds two 4-bit codes per byte along the
+    reduction axis (row 2i in the low nibble, 2i+1 in the high nibble).
+    Unpacking happens in VMEM right before the MXU dot — weights travel
+    HBM→VMEM at 4 bits each, the TPU counterpart of the paper's 4-bit SRAM
+    storage density (559 Kb/mm²)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    wp = w_ref[...].astype(jnp.int32)                     # [n_rows/2, bn]
+    lo = (wp & 15).astype(jnp.float32)
+    hi = ((wp >> 4) & 15).astype(jnp.float32)
+    half, bn = wp.shape
+    w_full = jnp.stack([lo, hi], axis=1).reshape(2 * half, bn)
+    part = jnp.dot(x_ref[...], w_full, preferred_element_type=jnp.float32)
+    code = jnp.clip(jnp.round(part * inv_lsb), 0.0, float(levels - 1))
+    o_ref[...] += code * lsb
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "levels", "gain", "full_scale",
+                              "bm", "bn", "interpret"))
+def cim_mvm_grouped_packed(x_codes: jax.Array, w_packed: jax.Array, *,
+                           n_rows: int, levels: int, gain: float,
+                           full_scale: float, bm: int = 128, bn: int = 128,
+                           interpret: bool = False) -> jax.Array:
+    """Packed-weight twin of cim_mvm_grouped. w_packed [K/2, N] uint8."""
+    m, k = x_codes.shape
+    k2, n = w_packed.shape
+    assert k == 2 * k2 and k % n_rows == 0 and n_rows % 2 == 0
+    groups = k // n_rows
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0
+
+    lsb = full_scale / (gain * (levels - 1))
+    kernel = functools.partial(_cim_mvm_packed_kernel, inv_lsb=1.0 / lsb,
+                               lsb=lsb, levels=levels)
+    grid = (m // bm, n // bn, groups)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n_rows), lambda i, j, g: (i, g)),
+            pl.BlockSpec((n_rows // 2, bn), lambda i, j, g: (g, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_codes.astype(jnp.float32), w_packed.astype(jnp.uint8))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "levels", "gain", "full_scale",
+                              "bm", "bn", "interpret"))
+def cim_mvm_grouped(x_codes: jax.Array, w_codes: jax.Array, *, n_rows: int,
+                    levels: int, gain: float, full_scale: float,
+                    bm: int = 128, bn: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """ŷ[M, N] = Σ_g ADC( x[M, g·144:(g+1)·144] @ w[g·144:(g+1)·144, N] ).
+
+    x_codes [M, K], w_codes [K, N]; K must already be padded to a multiple of
+    n_rows (ops.py handles padding — zero codes are exact no-ops).
+    """
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2 and k % n_rows == 0, (x_codes.shape, w_codes.shape, n_rows)
+    groups = k // n_rows
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, "caller pads M/N to block multiples"
+
+    lsb = full_scale / (gain * (levels - 1))
+    kernel = functools.partial(_cim_mvm_kernel, inv_lsb=1.0 / lsb, lsb=lsb,
+                               levels=levels, n_groups=groups)
+    grid = (m // bm, n // bn, groups)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, n_rows), lambda i, j, g: (i, g)),
+            pl.BlockSpec((n_rows, bn), lambda i, j, g: (g, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x_codes.astype(jnp.float32), w_codes.astype(jnp.float32))

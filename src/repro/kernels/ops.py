@@ -1,0 +1,95 @@
+"""Public jit'd wrapper around the cim_mvm Pallas kernel.
+
+Handles: leading-dim flattening, zero-padding of K to the macro depth and of
+M/N to block multiples (zero codes are unselected SRAM rows — bit-exact
+no-ops), backend selection (compiled TPU kernel vs interpret mode on CPU),
+and block-size tuning knobs used by the §Perf hillclimb.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.macro import MacroConfig, Scheme
+
+from .cim_mvm import cim_mvm_grouped, cim_mvm_grouped_packed
+
+
+def pack_codes(w_codes: jax.Array) -> jax.Array:
+    """[K, N] 4-bit codes → [K/2, N] uint8 (row 2i low nibble, 2i+1 high).
+
+    K must be even (pad first). This is the wire/HBM format the packed
+    kernel consumes — 4 bits per stored weight, as in the SRAM array.
+    """
+    k, n = w_codes.shape
+    assert k % 2 == 0, "pad K to even before packing"
+    wi = w_codes.astype(jnp.int32).reshape(k // 2, 2, n)
+    return (wi[:, 0] | (wi[:, 1] << 4)).astype(jnp.uint8)
+
+
+def cim_mvm_pallas_packed(x_codes: jax.Array, w_packed: jax.Array,
+                          cfg: MacroConfig, *, bm: int = 128, bn: int = 128,
+                          interpret: bool | None = None) -> jax.Array:
+    """ŷ ≈ Σ X̃ W̃ with 4-bit-packed weights. x [..., K], w_packed [K/2, M]."""
+    assert cfg.scheme == Scheme.BP
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    lead = x_codes.shape[:-1]
+    k = x_codes.shape[-1]
+    assert k == 2 * w_packed.shape[0] and k % cfg.n_rows == 0, \
+        "caller pads K to the macro depth before packing"
+    x2 = x_codes.reshape(-1, k)
+    m, n = x2.shape[0], w_packed.shape[1]
+    x2 = _pad_to(x2, min(bm, max(m, 1)), 0)
+    w2 = _pad_to(w_packed, min(bn, max(n, 1)), 1)
+    bm_eff = bm if x2.shape[0] % bm == 0 else x2.shape[0]
+    bn_eff = bn if w2.shape[1] % bn == 0 else w2.shape[1]
+    out = cim_mvm_grouped_packed(
+        x2, w2, n_rows=cfg.n_rows, levels=cfg.effective_adc_levels(),
+        gain=cfg.gain, full_scale=cfg.full_scale(), bm=bm_eff, bn=bn_eff,
+        interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def cim_mvm_pallas(x_codes: jax.Array, w_codes: jax.Array, cfg: MacroConfig,
+                   *, bm: int = 128, bn: int = 128,
+                   interpret: bool | None = None) -> jax.Array:
+    """ŷ ≈ Σ X̃ W̃ through the fused BP kernel.
+
+    x_codes [..., K] unsigned DAC codes, w_codes [K, M] stored codes.
+    Only the BP scheme is implemented as a fused kernel — it is the paper's
+    deployed scheme; WBS/BS baselines run on the jnp path.
+    """
+    assert cfg.scheme == Scheme.BP, "fused kernel implements BP only"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    lead = x_codes.shape[:-1]
+    k = x_codes.shape[-1]
+    x2 = x_codes.reshape(-1, k)
+    m = x2.shape[0]
+    n = w_codes.shape[-1]
+
+    x2 = _pad_to(_pad_to(x2, cfg.n_rows, 1), min(bm, max(m, 1)), 0)
+    w2 = _pad_to(_pad_to(w_codes, cfg.n_rows, 0), min(bn, max(n, 1)), 1)
+    # Block sizes must divide the (padded) dims.
+    bm_eff = bm if x2.shape[0] % bm == 0 else x2.shape[0]
+    bn_eff = bn if w2.shape[1] % bn == 0 else w2.shape[1]
+
+    out = cim_mvm_grouped(
+        x2, w2, n_rows=cfg.n_rows, levels=cfg.effective_adc_levels(),
+        gain=cfg.gain, full_scale=cfg.full_scale(), bm=bm_eff, bn=bn_eff,
+        interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)

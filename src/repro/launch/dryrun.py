@@ -1,0 +1,411 @@
+"""Multi-pod dry-run: prove every (arch × shape × mesh) cell lowers,
+compiles, fits, and report its roofline terms — without real hardware.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single [--cim bp] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+# The VERY FIRST two lines (before ANY other import, incl. repro.*): jax
+# locks the device count on first init; the dry-run needs 512 placeholders.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import Roofline, model_flops
+from repro.configs.base import SHAPES, TrainConfig
+from repro.configs.registry import ARCHS, cell_is_runnable
+from repro.core.cim_matmul import CIMConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry
+from repro.parallel import sharding
+from repro.runtime.trainer import make_train_step
+
+
+# ---------------------------------------------------------------------------
+# sharding of abstract inputs
+# ---------------------------------------------------------------------------
+def _with_shardings(tree, spec_tree, mesh):
+    def one(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(one, tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def batch_shardings(batch_abs, mesh):
+    baxes = sharding.resolve("batch")
+    def one(sds):
+        spec = sharding.spec_for(sds.shape,
+                                 ("batch",) + (None,) * (sds.ndim - 1))
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    del baxes
+    return jax.tree.map(one, batch_abs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_shardings(cache_abs, mesh):
+    """Decode-cache sharding: batch over batch axes when divisible (then the
+    sequence axis goes over "model" = SP decode); otherwise the sequence axis
+    spreads over (data, model) — the long_500k single-sequence layout."""
+    import math
+    baxes = sharding.resolve("batch") or ()
+    bsize = math.prod(mesh.shape[a] for a in baxes) if baxes else 1
+
+    def one_path(kp, sds):
+        name = str(getattr(kp[-1], "key", kp[-1]))
+        nd = len(sds.shape)
+        if nd == 0:
+            spec = P()
+        elif name in ("k", "v", "latent"):
+            batch_ok = sds.shape[1] % max(bsize, 1) == 0
+            seq_log = "seq_tp" if batch_ok else "seq"
+            logical = [None, "batch" if batch_ok else None, seq_log] \
+                + [None] * (nd - 3)
+            spec = sharding.spec_for(sds.shape, logical)
+        elif name == "S":
+            spec = sharding.spec_for(sds.shape,
+                                     (None, "batch", "tp") + (None,) * (nd - 3))
+        elif name == "conv":
+            spec = sharding.spec_for(sds.shape, (None, "batch", None, "tp"))
+        elif name in ("tm_x", "cm_x"):
+            spec = sharding.spec_for(sds.shape,
+                                     (None, "batch") + (None,) * (nd - 2))
+        else:
+            spec = P()
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    flat = jax.tree_util.tree_flatten_with_path(cache_abs)
+    leaves = [one_path(kp, leaf) for kp, leaf in flat[0]]
+    return jax.tree_util.tree_unflatten(flat[1], leaves)
+
+
+def params_shardings(params_abs, mesh):
+    spec_tree = sharding.tree_param_specs(params_abs)
+    return _with_shardings(params_abs, spec_tree, mesh)
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+def choose_optimizer(params_abs) -> str:
+    from repro.analysis.roofline import count_params
+    return "adafactor" if count_params(params_abs) > 3e10 else "adamw"
+
+
+# train-step knobs for §Perf variants (e.g. {"microbatch": 8}); the launch
+# CLI keeps defaults — only repro.launch.perf mutates this.
+TC_OVERRIDES: dict = {}
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, cim: str = "off",
+               unroll: bool = False, cfg_override=None):
+    """Returns (step_fn, abstract_args tuple, cfg, params_abs)."""
+    cfg = cfg_override or ARCHS[arch]
+    if cim != "off":
+        cfg = cfg.replace(cim=CIMConfig(enabled=True, backend="scan"))
+    prequant = cim == "bp-prequant"
+    if unroll:
+        # exact FLOPs/bytes for the roofline: XLA cost_analysis counts while
+        # bodies once, so analysis builds unroll the layer stacks
+        cfg = cfg.replace(scan_layers=False)
+    shape = SHAPES[shape_name]
+    mod = registry.get_module(cfg)
+    max_seq = shape.seq_len + (8 if shape.kind != "train" else 0)
+    params_abs = registry.abstract_params(cfg, max_seq=max_seq)
+    if prequant:  # serving with offline-quantized stored codes (§Perf P3)
+        from repro.models.quantize import abstract_quantized_params
+        params_abs = abstract_quantized_params(params_abs, cfg)
+    p_sh = params_shardings(params_abs, mesh)
+    batch_abs = registry.input_specs(cfg, shape)
+    b_sh = batch_shardings(batch_abs, mesh)
+
+    if shape.kind == "train":
+        tc = TrainConfig(optimizer=choose_optimizer(params_abs),
+                         **TC_OVERRIDES)
+        step, opt = make_train_step(cfg, tc)
+        state_abs = {"params": params_abs,
+                     "opt": jax.eval_shape(opt.init, params_abs)}
+        state_sh = {"params": p_sh,
+                    "opt": _with_shardings(
+                        state_abs["opt"],
+                        sharding.tree_param_specs(state_abs["opt"]), mesh)}
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32,
+                                   sharding=NamedSharding(mesh, P()))
+        fn = jax.jit(step, donate_argnums=(0,))
+        return fn, (state_sh, b_sh, rng), cfg, params_abs
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return mod.prefill(params, batch, cfg)
+        fn = jax.jit(prefill_fn)
+        return fn, (p_sh, b_sh), cfg, params_abs
+
+    # decode: one new token against a seq_len-deep cache
+    cache_abs = jax.eval_shape(
+        lambda: mod.init_cache(cfg, shape.global_batch, shape.seq_len))
+    # the running position is seq_len-1 (cache almost full — worst case)
+    c_sh = cache_shardings(cache_abs, mesh)
+
+    def decode_fn(params, tokens, cache):
+        return mod.decode_step(params, tokens, cache, cfg)
+
+    fn = jax.jit(decode_fn, donate_argnums=(2,))
+    return fn, (p_sh, b_sh["tokens"], c_sh), cfg, params_abs
+
+
+# ---------------------------------------------------------------------------
+# exact-cost extrapolation: XLA cost_analysis counts while bodies once, and
+# fully unrolling 61 layers × 512 ways is compile-prohibitive on 1 CPU core.
+# Layers within a stack are HLO-identical, so per-layer cost is EXACTLY the
+# difference of two small unrolled builds; totals extrapolate linearly in the
+# stack depths. Validated against a full 24-layer unroll (<2% deviation).
+# ---------------------------------------------------------------------------
+def _layer_knobs(cfg):
+    """[(apply_fn(cfg, k), base_count, full_count)] per homogeneous stack."""
+    if cfg.family in ("dense", "vlm", "moe") and not cfg.encoder_layers:
+        if cfg.moe and cfg.moe.first_dense:
+            fd = cfg.moe.first_dense
+
+            def set_moe(c, k):  # k routed-expert layers, 1 dense layer
+                return c.replace(n_layers=1 + k,
+                                 moe=dataclasses.replace(c.moe, first_dense=1))
+
+            def set_dense(c, k):  # k dense layers, 1 moe layer
+                return c.replace(n_layers=k + 1,
+                                 moe=dataclasses.replace(c.moe, first_dense=k))
+
+            return [(set_moe, 1, cfg.n_layers - fd), (set_dense, 1, fd)]
+        return [(lambda c, k: c.replace(n_layers=k), 1, cfg.n_layers)]
+    if cfg.family == "audio":  # enc-dec: two stacks
+        return [
+            (lambda c, k: c.replace(n_layers=k), 1, cfg.n_layers),
+            (lambda c, k: c.replace(encoder_layers=k), 1, cfg.encoder_layers),
+        ]
+    if cfg.family == "ssm":
+        return [(lambda c, k: c.replace(n_layers=k), 1, cfg.n_layers)]
+    raise ValueError(cfg.family)
+
+
+def _measure_costs(arch, shape_name, mesh, *, cim, cfg_variant):
+    fn, args, _, _ = build_cell(arch, shape_name, mesh, cim=cim,
+                                unroll=True, cfg_override=cfg_variant)
+    with mesh:
+        compiled = fn.lower(*args).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0)),
+           "coll_total": float(coll.total_bytes)}
+    for k, v in coll.bytes_by_kind.items():
+        out[f"coll_{k}"] = float(v)
+    return out
+
+
+def extrapolated_costs(arch, shape_name, mesh, *, cim="off",
+                       cfg_base=None) -> dict:
+    """Exact per-step costs via per-layer differencing of unrolled builds."""
+    cfg = cfg_base or ARCHS[arch]
+    if cim != "off":
+        cfg = cfg.replace(cim=CIMConfig(enabled=True, backend="scan"))
+    if cfg.family == "hybrid":
+        # coupled knobs (mamba depth, weight-shared attn applications):
+        # F(L, A) = F0 + L·Fm + A·Fs from three small builds
+        mk = lambda n, se: cfg.replace(
+            n_layers=n, ssm=dataclasses.replace(cfg.ssm, shared_every=se))
+        m1 = _measure_costs(arch, shape_name, mesh, cim=cim,
+                            cfg_variant=mk(1, 0))
+        m2 = _measure_costs(arch, shape_name, mesh, cim=cim,
+                            cfg_variant=mk(2, 0))
+        ms = _measure_costs(arch, shape_name, mesh, cim=cim,
+                            cfg_variant=mk(2, 2))
+        apps = cfg.n_layers // cfg.ssm.shared_every
+        total = {}
+        for k in set(m1) | set(m2) | set(ms):
+            fm = m2.get(k, 0.0) - m1.get(k, 0.0)
+            fs = ms.get(k, 0.0) - m2.get(k, 0.0)
+            total[k] = max(m1.get(k, 0.0) + (cfg.n_layers - 1) * fm
+                           + apps * fs, 0.0)
+        return total
+    knobs = _layer_knobs(cfg)
+    base_cfg = cfg
+    for apply_fn, b, _ in knobs:
+        base_cfg = apply_fn(base_cfg, b)
+    base = _measure_costs(arch, shape_name, mesh, cim=cim,
+                          cfg_variant=base_cfg)
+    total = dict(base)
+    for apply_fn, b, full in knobs:
+        var_cfg = base_cfg
+        for f2, b2, _ in knobs:          # keep other knobs at base
+            if f2 is not apply_fn:
+                var_cfg = f2(var_cfg, b2)
+        var_cfg = apply_fn(var_cfg, b + 1)
+        plus = _measure_costs(arch, shape_name, mesh, cim=cim,
+                              cfg_variant=var_cfg)
+        for k in set(base) | set(plus):
+            per_layer = plus.get(k, 0.0) - base.get(k, 0.0)
+            total[k] = total.get(k, 0.0) + (full - b) * per_layer
+    return {k: max(v, 0.0) for k, v in total.items()}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             cim: str = "off", out_dir: str | None = None,
+             analysis: str = "scan", cfg_override=None) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = ARCHS[arch]
+    runnable, why = cell_is_runnable(cfg, shape)
+    mesh_name = {"single": "pod16x16", "multi": "pod2x16x16"}[mesh_kind]
+    cell_id = f"{arch}__{shape_name}__{mesh_name}" + \
+        (f"__cim-{cim}" if cim != "off" else "") + \
+        ("__xp" if analysis == "extrapolate" else "")
+    result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "cim": cim, "cell": cell_id}
+    if not runnable:
+        result["status"] = "skipped"
+        result["reason"] = why
+        _dump(result, out_dir, cell_id)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    sharding.set_mesh(mesh)
+    try:
+        t0 = time.monotonic()
+        fn, args, cfg2, params_abs = build_cell(arch, shape_name, mesh,
+                                                cim=cim,
+                                                cfg_override=cfg_override)
+        with mesh:
+            lowered = fn.lower(*args)
+            t_lower = time.monotonic() - t0
+            compiled = lowered.compile()
+            t_compile = time.monotonic() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+        coll = collective_bytes(hlo)
+        chips = mesh.devices.size
+        flops = float(cost.get("flops", 0.0))
+        bytes_ = float(cost.get("bytes accessed", 0.0))
+        coll_total = float(coll.total_bytes)
+        coll_detail = {"bytes": coll.bytes_by_kind,
+                       "counts": coll.count_by_kind}
+        cost_basis = "scanned(while-bodies-counted-once)"
+        if analysis == "extrapolate":
+            ext = extrapolated_costs(arch, shape_name, mesh, cim=cim,
+                                     cfg_base=cfg_override)
+            flops, bytes_ = ext["flops"], ext["bytes"]
+            coll_total = ext["coll_total"]
+            coll_detail = {"bytes": {k[5:]: v for k, v in ext.items()
+                                     if k.startswith("coll_") and
+                                     k != "coll_total"}}
+            cost_basis = "unrolled-per-layer-extrapolation"
+        rl = Roofline(
+            arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+            hlo_flops=flops, hlo_bytes=bytes_,
+            collective_bytes=coll_total,
+            model_flops=model_flops(cfg2, shape, params_abs),
+            peak_bytes_per_chip=_peak_bytes(mem),
+            collective_detail=coll_detail,
+        )
+        result.update({
+            "status": "ok", "cost_basis": cost_basis,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "memory_analysis": _mem_dict(mem),
+            "roofline": rl.to_dict(),
+        })
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc(limit=25)
+    finally:
+        sharding.set_mesh(None)
+    _dump(result, out_dir, cell_id)
+    return result
+
+
+def _peak_bytes(mem) -> float:
+    for attr in ("peak_memory_in_bytes",):
+        if hasattr(mem, attr):
+            return float(getattr(mem, attr))
+    # host-platform memory analysis exposes totals instead
+    tot = 0.0
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes"):
+        tot += float(getattr(mem, attr, 0.0))
+    alias = float(getattr(mem, "alias_size_in_bytes", 0.0))
+    return tot - alias
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        if hasattr(mem, attr):
+            out[attr] = float(getattr(mem, attr))
+    return out
+
+
+def _dump(result: dict, out_dir: str | None, cell_id: str):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, cell_id + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--cim", choices=("off", "bp"), default="off")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--analysis", choices=("scan", "extrapolate"),
+                    default="scan",
+                    help="extrapolate = exact roofline costs from small "
+                         "unrolled builds (single-pod analysis pass)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    for a, s, m in cells:
+        r = run_cell(a, s, m, cim=args.cim, out_dir=args.out,
+                     analysis=args.analysis)
+        status = r["status"]
+        extra = ""
+        if status == "ok":
+            rl = r["roofline"]
+            extra = (f" dom={rl['dominant']} frac={rl['roofline_fraction']:.3f}"
+                     f" mem/chip={r['memory_analysis'].get('temp_size_in_bytes', 0) / 2**30:.2f}GiB"
+                     f" compile={r['compile_s']}s")
+        elif status == "error":
+            extra = " " + r["error"].splitlines()[0][:120]
+        print(f"[{status:7s}] {r['cell']}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Training launcher.
+
+Full-scale configs target the production mesh (this is what a real cluster
+job would run); --smoke runs the reduced config end-to-end on local devices,
+which is what the CPU container can execute.
+
+  PYTHONPATH=src python -m repro.launch.train --arch internlm2-1.8b --smoke \
+      --steps 50 --batch 8 --seq 128 [--cim bp] [--ckpt /tmp/ckpt]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.configs.registry import ARCHS, SMOKES
+from repro.core.cim_matmul import CIMConfig
+from repro.runtime.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--cim", choices=("off", "bp"), default="off")
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compression", action="store_true")
+    args = ap.parse_args()
+
+    cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
+    if args.cim == "bp":
+        cfg = cfg.replace(cim=CIMConfig(enabled=True))
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    tc = TrainConfig(steps=args.steps, lr=args.lr,
+                     microbatch=args.microbatch,
+                     grad_compression=args.grad_compression,
+                     checkpoint_every=max(args.steps // 4, 1))
+    trainer = Trainer(cfg, shape, tc, args.ckpt)
+    out = trainer.run()
+    for m in out["metrics"]:
+        print(json.dumps(m))
+    print(f"done: {out['final_step']} steps; "
+          f"stragglers={trainer.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

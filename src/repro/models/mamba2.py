@@ -1,0 +1,328 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid (Mamba2 backbone with a
+weight-shared attention block every `shared_every` layers).
+
+Train/prefill use the chunked SSD schedule (intra-chunk matmuls with scalar
+per-head decays + inter-chunk state scan); decode is the exact O(1)-state
+recurrence — which is why zamba2 runs the long_500k cell.
+
+Per DESIGN.md: SSD state math is digital; in/out/xBC/dt projections and the
+shared block's matmuls route through the CIM-switchable dense layer.
+Simplification (noted in DESIGN.md): Zamba2's two alternating shared blocks
+and the concat-with-embedding input are reduced to one shared block applied
+on the residual stream.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.parallel.sharding import constrain
+
+from . import common
+from .common import (attention_apply, attention_init, cross_entropy, dense,
+                     dtype_of, embed_init, embed_lookup, mlp_apply, mlp_init,
+                     norm, norm_init, unembed)
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.d_state
+    return d_in, n_heads, conv_dim
+
+
+def _mamba_init(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, n_h, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    dt = dtype_of(cfg)
+    p = {}
+    # fused in-projection: [z | x | B | C | dt]
+    p.update(common.dense_init(ks[0], d, 2 * d_in + 2 * s.d_state + n_h,
+                               dtype=dt, name_w="w_in"))
+    p["conv_w"] = (jax.random.normal(ks[1], (s.conv_kernel, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt)
+    p["conv_b"] = jnp.zeros((conv_dim,), dt)
+    p["a_log"] = jnp.log(jnp.linspace(1.0, 16.0, n_h)).astype(jnp.float32)
+    p["dt_bias"] = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[2], (n_h,), jnp.float32,
+                                   math.log(1e-3), math.log(1e-1))))
+    ).astype(jnp.float32)
+    p["d_skip"] = jnp.ones((n_h,), jnp.float32)
+    p["norm_g"] = jnp.ones((d_in,), dt)
+    p.update(common.dense_init(ks[3], d_in, d, dtype=dt,
+                               scale=1.0 / math.sqrt(d_in * 2 * cfg.n_layers),
+                               name_w="w_out"))
+    return p
+
+
+def init(key, cfg: ModelConfig, **_) -> dict:
+    ks = jax.random.split(key, 4)
+    layers = [
+        {"norm1": norm_init(cfg.d_model, dtype=dtype_of(cfg), kind=cfg.norm),
+         "ssm": _mamba_init(jax.random.fold_in(ks[0], i), cfg)}
+        for i in range(cfg.n_layers)]
+    params = {"tok": embed_init(ks[1], cfg),
+              "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+              "final_norm": norm_init(cfg.d_model, dtype=dtype_of(cfg),
+                                      kind=cfg.norm)}
+    if cfg.ssm.shared_every:
+        params["shared"] = {
+            "norm1": norm_init(cfg.d_model, dtype=dtype_of(cfg), kind=cfg.norm),
+            "attn": attention_init(ks[2], cfg),
+            "norm2": norm_init(cfg.d_model, dtype=dtype_of(cfg), kind=cfg.norm),
+            "mlp": mlp_init(ks[3], cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def _conv1d(x: jax.Array, w: jax.Array, b: jax.Array,
+            state: jax.Array | None):
+    """Causal depthwise conv. x [B,T,C]; state [B,k−1,C] carries history."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k)) + b
+    return jax.nn.silu(out), xp[:, -(k - 1):]
+
+
+def ssd_chunked(xh, dt, a, B, C, *, chunk: int, state0=None,
+                unroll: bool = False):
+    """Chunked SSD. xh [B,T,H,dh], dt [B,T,H], a [H] (<0), B/C [B,T,N].
+
+    y_i = Σ_{j≤i} exp(l_i−l_j)·(C_i·B_j)·dt_j·x_j + C_i·(exp(l_i)·S₀)
+    with l = cumsum(a·dt). All exponents ≤ 0 — numerically clean.
+    """
+    b, t, h, dh = xh.shape
+    n = B.shape[-1]
+    pad = (-t) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = (t + pad) // chunk
+    xc = xh.reshape(b, nc, chunk, h, dh).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+    l = jnp.cumsum(a * dtc, axis=2)                   # [B,NC,C,H] (≤0, decr.)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dh, n), jnp.float32)
+
+    def body(S, xs):
+        xcc, dcc, bcc, ccc, lcc = xs
+        # decay matrix exp(l_i − l_j) for j ≤ i  (else 0)
+        dec = jnp.exp(lcc[:, :, None, :] - lcc[:, None, :, :])   # [B,C,C,H]
+        mask = jnp.tril(jnp.ones((lcc.shape[1], lcc.shape[1]), bool))
+        dec = jnp.where(mask[None, :, :, None], dec, 0.0)
+        cb = jnp.einsum("bin,bjn->bij", ccc, bcc)                # C_i·B_j
+        att = cb[..., None] * dec * dcc[:, None, :, :]           # [B,i,j,H]
+        y = jnp.einsum("bijh,bjhd->bihd", att, xcc)
+        # inter-chunk: y_i += (C_i·exp(l_i)) @ S
+        y = y + jnp.einsum("bin,bhdn,bih->bihd", ccc, S, jnp.exp(lcc))
+        # state update: S' = exp(l_C)·S + Σ_j dt_j·exp(l_C−l_j)·x_j ⊗ B_j
+        wC = jnp.exp(lcc[:, -1])                                  # [B,H]
+        kj = dcc * jnp.exp(lcc[:, -1, None, :] - lcc)             # [B,C,H]
+        S_add = jnp.einsum("bjh,bjhd,bjn->bhdn", kj, xcc, bcc)
+        S_new = wC[..., None, None] * S + S_add
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(v, 1, 0) for v in (xc, dtc, Bc, Cc, l))
+    state, ys = jax.lax.scan(body, state0, xs, unroll=True if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, dh)[:, :t]
+    return y, state
+
+
+def _mamba_block(p, x, cfg: ModelConfig, *, train, cache=None,
+                 chunked=True):
+    """x [B,T,D] → (y, new_cache {"conv": [B,k−1,convdim], "S": [B,H,dh,N]})."""
+    s = cfg.ssm
+    d_in, n_h, conv_dim = _dims(cfg)
+    b, t, _ = x.shape
+    proj = dense(p, x, cfg, train=train, w="w_in", b=None)
+    z, xbc, dt_raw = jnp.split(proj, [d_in, d_in + conv_dim], axis=-1)
+    c = cache or {}
+    xbc, conv_state = _conv1d(xbc, p["conv_w"].astype(xbc.dtype),
+                              p["conv_b"].astype(xbc.dtype), c.get("conv"))
+    xh, B, C = jnp.split(xbc, [d_in, d_in + s.d_state], axis=-1)
+    xh = constrain(xh.reshape(b, t, n_h, s.head_dim), "batch", None, "tp", None)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    if chunked:
+        y, S = ssd_chunked(xh, dt, a, B, C, chunk=s.chunk, state0=c.get("S"),
+                           unroll=not cfg.scan_layers)
+    else:  # exact decode recurrence
+        x1 = xh[:, 0].astype(jnp.float32)
+        dt1, B1, C1 = dt[:, 0], B[:, 0].astype(jnp.float32), \
+            C[:, 0].astype(jnp.float32)
+        decay = jnp.exp(a * dt1)                                   # [B,H]
+        S = c["S"] * decay[..., None, None] + jnp.einsum(
+            "bh,bhd,bn->bhdn", dt1, x1, B1)
+        y = jnp.einsum("bhdn,bn->bhd", S, C1)[:, None]
+    y = y + p["d_skip"][..., None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm_g"])
+    out = dense(p, y, cfg, train=train, w="w_out", b=None)
+    return constrain(out, *common.res_axes(cfg)), \
+        {"conv": conv_state, "S": S}
+
+
+def _gated_norm(y, z, g):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-5)
+    return (yf * g.astype(jnp.float32)).astype(y.dtype)
+
+
+# ---------------------------------------------------------------------------
+# zamba2 hybrid plumbing
+# ---------------------------------------------------------------------------
+def _shared_block(sp, h, cfg: ModelConfig, *, positions, train,
+                  cache=None, pos_idx=0):
+    a, new_kv = attention_apply(sp["attn"], norm(sp["norm1"], h, cfg), cfg,
+                                positions=positions, train=train,
+                                cache=cache, cache_index=pos_idx)
+    h = h + a
+    h = h + mlp_apply(sp["mlp"], norm(sp["norm2"], h, cfg), cfg, train=train)
+    return h, new_kv
+
+
+def _n_shared_apps(cfg: ModelConfig) -> int:
+    se = cfg.ssm.shared_every
+    return cfg.n_layers // se if se else 0
+
+
+def _slice_layers(params, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], params["layers"])
+
+
+def _forward(params, tokens, cfg: ModelConfig, *, train, caches=None,
+             shared_kv=None, pos0=0, chunked=True):
+    """Shared forward. caches: stacked per-layer SSM caches or None.
+    shared_kv: stacked [A, ...] KV caches for the shared block (decode)."""
+    x = embed_lookup(params["tok"], tokens, cfg)
+    b, t = x.shape[:2]
+    positions = pos0 + jnp.broadcast_to(jnp.arange(t), (b, t))
+    se = cfg.ssm.shared_every or cfg.n_layers + 1
+    new_caches, new_shared = [], []
+
+    def run_span(h, lo, hi, span_caches):
+        stacked = _slice_layers(params, lo, hi)
+
+        def body(hh, xs):
+            lp, c = xs if span_caches is not None else (xs, None)
+            hh, nc = _mamba_block(lp["ssm"], norm(lp["norm1"], hh, cfg), cfg,
+                                  train=train, cache=c, chunked=chunked)
+            return hh, nc
+
+        body_fn = jax.checkpoint(
+            body, policy=common.remat_policy(cfg)
+        ) if (cfg.remat and train) else body
+        xs = (stacked, span_caches) if span_caches is not None else stacked
+        return common.scan_layers(body_fn, h, xs,
+                                  unroll=not cfg.scan_layers)
+
+    h = x
+    app = 0
+    # prefill (caches given, no decode-time shared kv) must COLLECT the
+    # weight-shared attention block's K/V per application for later decode
+    collect_shared = caches is not None and shared_kv is None
+    for lo in range(0, cfg.n_layers, se):
+        hi = min(lo + se, cfg.n_layers)
+        span_c = None if caches is None else \
+            jax.tree.map(lambda a: a[lo:hi], caches)
+        h, nc = run_span(h, lo, hi, span_c)
+        new_caches.append(nc)
+        if cfg.ssm.shared_every and hi - lo == se and app < _n_shared_apps(cfg):
+            if shared_kv is not None:
+                kv = jax.tree.map(lambda a: a[app], shared_kv)
+            else:
+                kv = {} if collect_shared else None
+            h, new_kv = _shared_block(params["shared"], h, cfg,
+                                      positions=positions, train=train,
+                                      cache=kv, pos_idx=pos0)
+            if new_kv is not None:
+                new_shared.append(new_kv)
+            app += 1
+    h = norm(params["final_norm"], h, cfg)
+    caches_out = jax.tree.map(lambda *xs: jnp.concatenate(xs), *new_caches) \
+        if caches is not None or not train else None
+    shared_out = jax.tree.map(lambda *xs: jnp.stack(xs), *new_shared) \
+        if new_shared else None
+    return h, caches_out, shared_out
+
+
+def train_loss(params, batch, cfg: ModelConfig, rng=None):
+    h, _, _ = _forward(params, batch["tokens"], cfg, train=True)
+    logits = unembed(params["tok"], h, cfg, train=True)
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    d_in, n_h, conv_dim = _dims(cfg)
+    s = cfg.ssm
+    L = cfg.n_layers
+    dt = dtype_of(cfg)
+    cache = {"pos": jnp.zeros((), jnp.int32),
+             "layers": {
+                 "conv": jnp.zeros((L, batch, s.conv_kernel - 1, conv_dim), dt),
+                 "S": jnp.zeros((L, batch, n_h, s.head_dim, s.d_state),
+                                jnp.float32)}}
+    apps = _n_shared_apps(cfg)
+    if apps:
+        cache["shared"] = {
+            "k": jnp.zeros((apps, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), dt),
+            "v": jnp.zeros((apps, batch, max_len, cfg.n_kv_heads,
+                            cfg.head_dim), dt)}
+    return cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len=None):
+    tokens = batch["tokens"]
+    b, t = tokens.shape
+    max_len = max_len or t
+    zero = init_cache(cfg, b, max_len)
+    h, caches, shared_kv = _forward(params, tokens, cfg, train=False,
+                                    caches=zero["layers"], chunked=True)
+    logits = unembed(params["tok"], h[:, -1], cfg)
+    cache = {"pos": jnp.full((), t, jnp.int32), "layers": caches}
+    if shared_kv is not None:
+        def pad(a):
+            widths = [(0, 0)] * a.ndim
+            widths[2] = (0, max_len - a.shape[2])
+            return jnp.pad(a, widths)
+        cache["shared"] = jax.tree.map(pad, shared_kv)
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    h, caches, shared_kv = _forward(
+        params, tokens, cfg, train=False, caches=cache["layers"],
+        shared_kv=cache.get("shared"), pos0=cache["pos"], chunked=False)
+    logits = unembed(params["tok"], h[:, 0], cfg)
+    out = {"pos": cache["pos"] + 1, "layers": caches}
+    if shared_kv is not None:
+        out["shared"] = shared_kv
+    return logits, out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

@@ -1,0 +1,148 @@
+"""DeepSeek-V3 Multi-head Latent Attention (MLA).
+
+Train/prefill reconstruct per-head K/V from the compressed latent and run
+standard chunked attention. Decode uses the *absorbed* formulation: the
+KV cache stores only the (kv_lora_rank + rope) latent per position — the
+whole point of MLA (576 dims instead of 128 heads × 256), which keeps the
+32k/500k-context caches small — and the query is absorbed through W_uk so
+scores are taken directly against the latent.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+
+from . import common
+from .common import dense, dtype_of, norm_init, res_axes, rope
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    p = {}
+    p.update(common.dense_init(ks[0], d, m.q_lora_rank, dtype=dt, name_w="w_dq"))
+    p["q_norm"] = norm_init(m.q_lora_rank, dtype=dt, kind="rmsnorm")
+    p.update(common.dense_init(ks[1], m.q_lora_rank, h * qk, dtype=dt,
+                               name_w="w_uq"))
+    p.update(common.dense_init(ks[2], d, m.kv_lora_rank, dtype=dt,
+                               name_w="w_dkv"))
+    p["kv_norm"] = norm_init(m.kv_lora_rank, dtype=dt, kind="rmsnorm")
+    p.update(common.dense_init(ks[3], m.kv_lora_rank,
+                               h * m.qk_nope_head_dim, dtype=dt, name_w="w_uk"))
+    p.update(common.dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim,
+                               dtype=dt, name_w="w_uv"))
+    p.update(common.dense_init(ks[5], d, m.qk_rope_head_dim, dtype=dt,
+                               name_w="w_kr"))
+    p.update(common.dense_init(
+        ks[6], h * m.v_head_dim, d, dtype=dt,
+        scale=1.0 / math.sqrt(h * m.v_head_dim * 2 * cfg.n_layers),
+        name_w="wo", name_b=None))
+    return p
+
+
+def _project_q(p, x, cfg: ModelConfig, positions, train):
+    m = cfg.mla
+    b, t, _ = x.shape
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    cq = common.norm(p["q_norm"], dense(p, x, cfg, train=train, w="w_dq",
+                                        b=None), cfg.replace(norm="rmsnorm"))
+    q = dense(p, cq, cfg, train=train, w="w_uq", b=None)
+    q = q.reshape(b, t, cfg.n_heads, qk)
+    q = constrain(q, "batch", None, "tp", None)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta, m.qk_rope_head_dim)
+    return q_nope, q_rope
+
+
+def _latent(p, x, cfg: ModelConfig, positions, train):
+    """Compressed KV latent + shared rope key: [B,T,lora], [B,T,rope]."""
+    m = cfg.mla
+    ckv = common.norm(p["kv_norm"], dense(p, x, cfg, train=train, w="w_dkv",
+                                          b=None), cfg.replace(norm="rmsnorm"))
+    kr = dense(p, x, cfg, train=train, w="w_kr", b=None)
+    kr = rope(kr[:, :, None, :], positions, cfg.rope_theta,
+              m.qk_rope_head_dim)[:, :, 0, :]
+    return ckv, kr
+
+
+def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, positions,
+          train: bool = False, cache: Optional[dict] = None,
+          cache_index=0, return_cache: bool = False):
+    """MLA attention. Returns (y, cache_entries | None).
+
+    cache entries: {"latent": [B, S, kv_lora + rope]}.
+    """
+    m = cfg.mla
+    b, t, _ = x.shape
+    q_nope, q_rope = _project_q(p, x, cfg, positions, train)
+
+    if cache is not None and t == 1 and not return_cache and "latent" in cache:
+        # ---- absorbed decode over the latent cache ----
+        ckv, kr = _latent(p, x, cfg, positions, train)
+        new_lat = jnp.concatenate([ckv, kr], -1)          # [B, 1, lat]
+        lat_cache = jax.lax.dynamic_update_slice(
+            cache["latent"], new_lat.astype(cache["latent"].dtype),
+            (0, cache_index, 0))
+        lat_cache = constrain(lat_cache, "batch", "seq_tp", None)
+        # absorb q through W_uk: q_abs[b,h,r] = Σ_d q_nope[b,h,d]·W_uk[r,(h,d)]
+        w_uk = p["w_uk"].reshape(m.kv_lora_rank, cfg.n_heads,
+                                 m.qk_nope_head_dim)
+        q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                           w_uk.astype(jnp.float32))
+        q_full = jnp.concatenate(
+            [q_abs, jnp.broadcast_to(q_rope[:, 0].astype(jnp.float32),
+                                     (b, cfg.n_heads, m.qk_rope_head_dim))],
+            -1)                                           # [B, H, lat]
+        # scores against the latent ("single latent KV head", scaled by the
+        # true per-head qk dim, not the latent width)
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        scores = jnp.einsum("bhr,bsr->bhs", q_full,
+                            lat_cache.astype(jnp.float32)) / math.sqrt(qk_dim)
+        mask = jnp.arange(lat_cache.shape[1])[None, None, :] \
+            <= jnp.asarray(cache_index)
+        scores = jnp.where(mask, scores, -1e30)
+        attn = jax.nn.softmax(scores, axis=-1)
+        ctx = jnp.einsum("bhs,bsr->bhr", attn,
+                         lat_cache[..., :m.kv_lora_rank].astype(jnp.float32))
+        w_uv = p["w_uv"].reshape(m.kv_lora_rank, cfg.n_heads, m.v_head_dim)
+        o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv.astype(jnp.float32))
+        o = o.reshape(b, 1, cfg.n_heads * m.v_head_dim).astype(x.dtype)
+        y = dense(p, o, cfg, train=train, w="wo", b=None)
+        return constrain(y, *res_axes(cfg)), {"latent": lat_cache}
+
+    # ---- train / prefill: reconstruct K, V and run chunked attention ----
+    ckv, kr = _latent(p, x, cfg, positions, train)
+    k_nope = dense(p, ckv, cfg, train=train, w="w_uk", b=None)
+    k_nope = k_nope.reshape(b, t, cfg.n_heads, m.qk_nope_head_dim)
+    v = dense(p, ckv, cfg, train=train, w="w_uv", b=None)
+    v = v.reshape(b, t, cfg.n_heads, m.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                  (b, t, cfg.n_heads, m.qk_rope_head_dim))],
+        -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = constrain(k, "batch", None, "tp", None)
+    v = constrain(v, "batch", None, "tp", None)
+    # pad V's head dim up to the QK dim so one attention primitive serves both
+    pad = k.shape[-1] - v.shape[-1]
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad > 0 else v
+    o = common.chunked_attention(q, k, v_p, causal=True, chunk=cfg.attn_chunk,
+                                 triangular_max=cfg.attn_triangular_max,
+                                 unroll=not cfg.scan_layers)
+    o = o[..., :m.v_head_dim]
+    o = o.reshape(b, t, cfg.n_heads * m.v_head_dim)
+    y = dense(p, o, cfg, train=train, w="wo", b=None)
+    entries = None
+    if return_cache:
+        entries = {"latent": jnp.concatenate([ckv, kr], -1)}
+    return constrain(y, *res_axes(cfg)), entries

@@ -1,0 +1,286 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Production layout (1000+ chip posture):
+  * routed expert weights [E, D, F]: E sharded over "model" (EP), D over
+    "data" (FSDP — all-gathered on use);
+  * token activations replicated over "model" between blocks (TP residual
+    stream), sharded over batch axes;
+  * baseline EP combine: each model rank computes its local experts' tokens
+    and the outputs are psum'd over "model" ("replicated-dispatch EP") —
+    simple and correct for every T including single-token decode;
+  * optimized EP (ep_mode="a2a", §Perf): sequence-sharded dispatch with
+    static-capacity all_to_all (DeepSeek-style), cutting collective bytes.
+  * shared experts (qwen2 / deepseek) run as a dense TP FFN outside the
+    EP region (they process every token — no routing needed).
+
+Experts are padded to a multiple of the model-axis size (qwen2's 60 → 64);
+pad experts receive no tokens (router logits exist only for real experts).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.cim_matmul import cim_matmul, cim_matmul_ste
+from repro.parallel import sharding
+from repro.parallel.sharding import constrain
+
+from . import common
+
+EP_PAD = 16  # pad expert count to a multiple of the model-axis size
+
+
+def padded_experts(n: int) -> int:
+    return -(-n // EP_PAD) * EP_PAD
+
+
+def init(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    e_pad = padded_experts(m.n_experts)
+    d, f = cfg.d_model, m.d_ff_expert
+    ks = jax.random.split(key, 6)
+    dt = common.dtype_of(cfg)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f * 2 * cfg.n_layers)
+    p = {
+        "router": (jax.random.normal(ks[0], (d, m.n_experts), jnp.float32)
+                   * 0.02),
+        "e_gate": (jax.random.normal(ks[1], (e_pad, d, f), jnp.float32)
+                   * scale_in).astype(dt),
+        "e_up": (jax.random.normal(ks[2], (e_pad, d, f), jnp.float32)
+                 * scale_in).astype(dt),
+        "e_down": (jax.random.normal(ks[3], (e_pad, f, d), jnp.float32)
+                   * scale_out).astype(dt),
+    }
+    if m.n_shared:
+        p["shared"] = common.mlp_init(ks[4], cfg, d_ff=m.d_ff_shared)
+        if m.shared_gate:
+            p["shared"]["w_sg"] = (jax.random.normal(ks[5], (d, 1),
+                                                     jnp.float32) * 0.02
+                                   ).astype(dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing + static-capacity dispatch (pure shape-static ops)
+# ---------------------------------------------------------------------------
+def _route(x2: jax.Array, router_w: jax.Array, top_k: int):
+    """x2 [T, D] → (probs [T, E], ids [T, k], weights [T, k])."""
+    logits = x2.astype(jnp.float32) @ router_w
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(
+        jnp.sum(weights, -1, keepdims=True), 1e-9)   # renormalize top-k
+    return probs, ids, weights
+
+
+def _positions_in_expert(ids_flat: jax.Array, e_pad: int):
+    """Slot index of each (token, choice) within its expert's buffer."""
+    onehot = jax.nn.one_hot(ids_flat, e_pad, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - onehot            # exclusive cumsum
+    return jnp.take_along_axis(pos, ids_flat[:, None], axis=1)[:, 0]
+
+
+def _expert_ffn(buf: jax.Array, wg, wu, wd, cfg: ModelConfig, train: bool):
+    """Batched expert MLP: buf [E, C, D] → [E, C, D] (CIM-aware)."""
+    if cfg.cim.enabled:
+        mm = cim_matmul_ste if train else cim_matmul
+        f = jax.vmap(lambda xb, w: mm(xb.astype(jnp.float32),
+                                      w.astype(jnp.float32), cfg.cim))
+        h = jax.nn.silu(f(buf, wg)) * f(buf, wu)
+        return f(h, wd).astype(buf.dtype)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def _local_moe(x2, router_w, wg, wu, wd, cfg: ModelConfig, *, train: bool,
+               capacity: int, e_offset: int = 0):
+    """Dispatch x2's tokens to the experts in wg/wu/wd (a contiguous slice
+    [e_offset, e_offset + E_local)), compute, and combine. Tokens routed
+    elsewhere contribute zero — callers psum across expert shards.
+
+    Returns (y2 [T, D], aux_loss).
+    """
+    t, d = x2.shape
+    e_local = wg.shape[0]
+    e_pad = padded_experts(cfg.moe.n_experts)
+    k = cfg.moe.top_k
+
+    probs, ids, weights = _route(x2, router_w, k)
+    ids_flat = ids.reshape(-1)                            # [T·k]
+    pos = _positions_in_expert(ids_flat, e_pad)           # [T·k]
+    local = (ids_flat >= e_offset) & (ids_flat < e_offset + e_local)
+    keep = (pos < capacity) & local
+    slot = jnp.where(keep, (ids_flat - e_offset) * capacity + pos,
+                     e_local * capacity)                  # overflow slot
+    token_idx = jnp.repeat(jnp.arange(t), k)
+
+    buf = jnp.zeros((e_local * capacity + 1, d), x2.dtype)
+    buf = buf.at[slot].set(x2[token_idx])                 # drop beyond capacity
+    out = _expert_ffn(buf[:-1].reshape(e_local, capacity, d),
+                      wg, wu, wd, cfg, train)
+    out_flat = jnp.concatenate(
+        [out.reshape(e_local * capacity, d),
+         jnp.zeros((1, d), out.dtype)], 0)
+    y_choices = out_flat[slot] * weights.reshape(-1)[:, None].astype(out.dtype)
+    y2 = jnp.zeros((t, d), out.dtype).at[token_idx].add(y_choices)
+
+    # Switch-style load-balance loss (real experts only).
+    me = jnp.mean(jax.nn.one_hot(ids_flat, cfg.moe.n_experts,
+                                 dtype=jnp.float32), axis=0)
+    pe = jnp.mean(probs, axis=0)
+    aux = cfg.moe.n_experts * jnp.sum(me * pe)
+    return y2, aux
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(n_tokens * m.top_k * m.capacity_factor
+                      / padded_experts(m.n_experts)))
+    return max(8, -(-c // 8) * 8)
+
+
+def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
+          rng: Optional[jax.Array] = None):
+    """MoE FFN: x [B, T, D] → (y [B, T, D], aux_loss)."""
+    b, t, d = x.shape
+    mesh = sharding.get_mesh()
+    y_shared = _shared_expert(p, x, cfg, train) if cfg.moe.n_shared else 0.0
+
+    if mesh is None or "model" not in mesh.axis_names \
+            or padded_experts(cfg.moe.n_experts) % mesh.shape["model"] != 0:
+        x2 = x.reshape(b * t, d)
+        cap = _capacity(b * t, cfg)
+        y2, aux = _local_moe(x2, p["router"], p["e_gate"], p["e_up"],
+                             p["e_down"], cfg, train=train, capacity=cap)
+        return y_shared + y2.reshape(b, t, d).astype(x.dtype), aux
+
+    # --- expert-parallel shard_map --------------------------------------
+    batch_axes = sharding.resolve("batch") or ()
+    b_local = b // math.prod(mesh.shape[a] for a in batch_axes) if batch_axes else b
+    ep = mesh.shape["model"]
+    if cfg.moe.ep_mode == "a2a" and t % ep == 0:
+        y2, aux = _a2a_moe(p, x, cfg, mesh, batch_axes, b_local, train)
+        return y_shared + y2.astype(x.dtype), aux
+    cap = _capacity(b_local * t, cfg)
+
+    fsdp = sharding.resolve("fsdp") is not None \
+        and "data" in mesh.axis_names and mesh.shape["data"] > 1
+
+    def shard_fn(x_l, router_w, wg, wu, wd):
+        rank = jax.lax.axis_index("model")
+        e_local = wg.shape[0]
+        # FSDP all-gather of the local experts' D-shards (ZeRO-3 on use).
+        if fsdp:
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        bl, tl, dl = x_l.shape
+        y2, aux = _local_moe(x_l.reshape(bl * tl, dl), router_w, wg, wu, wd,
+                             cfg, train=train, capacity=cap,
+                             e_offset=rank * e_local)
+        y2 = jax.lax.psum(y2, "model")
+        # aux must be replicated across every mesh axis for the P() out_spec
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        return y2.reshape(bl, tl, dl), aux
+
+    x_spec = P(batch_axes if batch_axes else None, None, None)
+    dax = "data" if fsdp else None
+    out = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P("model", dax, None),
+                  P("model", dax, None), P("model", None, dax)),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["e_gate"], p["e_up"], p["e_down"])
+    y2, aux = out
+    return y_shared + y2.astype(x.dtype), aux
+
+
+def _a2a_moe(p: dict, x: jax.Array, cfg: ModelConfig, mesh, batch_axes,
+             b_local: int, train: bool):
+    """Sequence-sharded dispatch EP (DeepSeek-style), §Perf optimization.
+
+    Tokens are sharded over BOTH batch axes and "model" (sequence split), so
+    per-device dispatch buffers shrink by the model-axis size vs psum-EP and
+    the psum of the full activation is replaced by a pair of static-capacity
+    all_to_alls that move only routed tokens (top_k/E of the traffic).
+    """
+    b, t, d = x.shape
+    ep = mesh.shape["model"]
+    t_local = t // ep
+    e_pad = padded_experts(cfg.moe.n_experts)
+    e_local = e_pad // ep
+    k = cfg.moe.top_k
+    # per-expert capacity per SOURCE shard
+    cap = max(8, -(-int(math.ceil(b_local * t_local * k
+                                  * cfg.moe.capacity_factor / e_pad)) // 8) * 8)
+
+    fsdp = sharding.resolve("fsdp") is not None \
+        and "data" in mesh.axis_names and mesh.shape["data"] > 1
+
+    def shard_fn(x_l, router_w, wg, wu, wd):
+        if fsdp:
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        bl, tl, dl = x_l.shape
+        x2 = x_l.reshape(bl * tl, dl)
+        tloc = x2.shape[0]
+
+        probs, ids, weights = _route(x2, router_w, k)
+        ids_flat = ids.reshape(-1)
+        pos = _positions_in_expert(ids_flat, e_pad)
+        keep = pos < cap
+        slot = jnp.where(keep, ids_flat * cap + pos, e_pad * cap)
+        token_idx = jnp.repeat(jnp.arange(tloc), k)
+        send = jnp.zeros((e_pad * cap + 1, dl), x2.dtype)
+        send = send.at[slot].set(x2[token_idx])
+        send = send[:-1].reshape(e_pad, cap, dl)
+        # exchange: peer r receives its e_local experts' slots from every
+        # source, concatenated source-major along the capacity axis
+        recv = jax.lax.all_to_all(send, "model", split_axis=0,
+                                  concat_axis=1, tiled=True)
+        out = _expert_ffn(recv, wg, wu, wd, cfg, train)  # [e_local, ep·cap, D]
+        # return: split the source-concat axis, concat expert blocks back —
+        # lands exactly in this shard's original [E_pad, cap] slot layout
+        back = jax.lax.all_to_all(out, "model", split_axis=1,
+                                  concat_axis=0, tiled=True)
+        back = back.reshape(e_pad * cap, dl)
+        back = jnp.concatenate([back, jnp.zeros((1, dl), back.dtype)], 0)
+        y_choices = back[slot] * weights.reshape(-1)[:, None].astype(back.dtype)
+        y2 = jnp.zeros((tloc, dl), back.dtype).at[token_idx].add(y_choices)
+
+        me = jnp.mean(jax.nn.one_hot(ids_flat, cfg.moe.n_experts,
+                                     dtype=jnp.float32), axis=0)
+        pe = jnp.mean(probs, axis=0)
+        aux = cfg.moe.n_experts * jnp.sum(me * pe)
+        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        return y2.reshape(bl, tl, dl), aux
+
+    dax = "data" if fsdp else None
+    x_spec = P(batch_axes if batch_axes else None, "model", None)
+    y2, aux = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P("model", dax, None),
+                  P("model", dax, None), P("model", None, dax)),
+        out_specs=(x_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["e_gate"], p["e_up"], p["e_down"])
+    return y2, aux
+
+
+def _shared_expert(p: dict, x: jax.Array, cfg: ModelConfig, train: bool):
+    y = common.mlp_apply(p["shared"], x, cfg, train=train)
+    if cfg.moe.shared_gate:
+        g = jax.nn.sigmoid(
+            jnp.einsum("btd,dk->btk", x, p["shared"]["w_sg"].astype(x.dtype)))
+        y = y * g
+    return constrain(y, *common.res_axes(cfg))

@@ -1,0 +1,46 @@
+"""Offline weight quantization for serving: bf16 params → stored 4-bit codes
+(int8 containers) + scales, per Eq. 7's W̃ encoding.
+
+This is the deployment flow of a CIM system (weights are programmed into the
+SRAM once) and a §Perf memory-term optimization on TPU: decode reads half
+the weight bytes. Embeddings stay float (a lookup, not an MVP on the macro);
+norms/biases stay float.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.cim_matmul import quantize_weight_offline
+
+# dense-layer weight leaves that route through the macro (see PARAM_RULES)
+QUANTIZABLE = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "head",
+    "w_dq", "w_uq", "w_dkv", "w_uk", "w_uv", "w_kr", "w_proj",
+    "w_in", "w_out", "w_x", "w_r", "w_k", "w_v", "w_g",
+}
+
+
+def quantize_params(params: dict, cfg: ModelConfig) -> dict:
+    """Replace quantizable float leaves `w` with `w_q` (int8) + `w_scale`.
+
+    Works on concrete arrays and (via jax.eval_shape at the caller) on
+    abstract trees for the dry-run.
+    """
+    if isinstance(params, dict):
+        out = {}
+        for k, v in params.items():
+            if isinstance(v, dict):
+                out[k] = quantize_params(v, cfg)
+            elif k in QUANTIZABLE and getattr(v, "ndim", 0) >= 2:
+                codes, scale = quantize_weight_offline(v, cfg.cim)
+                out[k + "_q"] = codes
+                out[k + "_scale"] = scale
+            else:
+                out[k] = v
+        return out
+    return params
+
+
+def abstract_quantized_params(params_abs, cfg: ModelConfig):
+    return jax.eval_shape(lambda p: quantize_params(p, cfg), params_abs)

@@ -1,0 +1,44 @@
+"""Model registry: ModelConfig.family → implementation module.
+
+Uniform module API:
+  init(key, cfg, *, max_seq=0) → params
+  train_loss(params, batch, cfg, rng) → scalar
+  prefill(params, batch, cfg, max_len) → (logits, cache)
+  decode_step(params, tokens, cache, cfg) → (logits, cache)
+  init_cache(cfg, batch, max_len) → cache pytree
+  input_specs(cfg, shape) → {name: ShapeDtypeStruct}
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from . import mamba2, rwkv6, transformer
+
+_FAMILY = {
+    "dense": transformer, "moe": transformer, "vlm": transformer,
+    "audio": transformer, "ssm": rwkv6, "hybrid": mamba2,
+}
+
+
+def get_module(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(key, cfg: ModelConfig, *, max_seq: int = 0):
+    mod = get_module(cfg)
+    if mod is transformer:
+        return transformer.init(key, cfg, max_seq=max_seq)
+    return mod.init(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig, *, max_seq: int = 0):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, max_seq=max_seq),
+        jax.random.PRNGKey(0))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return get_module(cfg).input_specs(cfg, shape)

@@ -1,0 +1,280 @@
+"""RWKV6 ("Finch") — attention-free LM with data-dependent per-channel decay.
+
+The WKV6 recurrence  S_t = diag(w_t)·S_{t−1} + k_tᵀv_t,
+                     y_t = r_t·(S_{t−1} + diag(u)·k_tᵀv_t)
+is evaluated in chunked-parallel form for train/prefill (intra-chunk
+matmuls + inter-chunk scan — the TPU-friendly linear-attention schedule) and
+as the exact O(1)-state recurrence for decode, which is what makes the
+long_500k cell run where softmax-attention archs are skipped.
+
+Per DESIGN.md §Arch-applicability: the recurrence itself is element-wise
+state math (not an MVM against stored weights) so it stays digital; all
+R/K/V/G/decay-LoRA/output projections and the channel-mix FFN route through
+the CIM-switchable dense layer.
+
+Simplification noted in DESIGN.md: the 5-way ddlerp token-shift mixers are
+reduced to static learned μ per projection; the data-dependent decay LoRA
+(Finch's core novelty) is kept.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.parallel.sharding import constrain
+
+from . import common
+from .common import cross_entropy, dense, dtype_of, embed_init, embed_lookup, \
+    norm, norm_init, unembed
+
+LOG_DECAY_FLOOR = -5.0  # per-step log-decay clamp for chunk-form stability
+
+
+def _time_mix_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    n_h = d // hd
+    r = cfg.ssm.decay_lora_rank
+    ks = jax.random.split(key, 8)
+    dt = dtype_of(cfg)
+    p = {"mu": jnp.full((5, d), 0.5, dt)}  # r,k,v,g,w token-shift mixes
+    for i, name in enumerate(("w_r", "w_k", "w_v", "w_g")):
+        p.update(common.dense_init(ks[i], d, d, dtype=dt, name_w=name))
+    p["decay_w0"] = jnp.linspace(-6.0, -0.5, d).astype(jnp.float32)
+    p["decay_a"] = (jax.random.normal(ks[4], (d, r), jnp.float32) * 0.01).astype(dt)
+    p["decay_b"] = (jax.random.normal(ks[5], (r, d), jnp.float32) * 0.01).astype(dt)
+    p["bonus_u"] = jnp.zeros((d,), jnp.float32)
+    p.update(common.dense_init(ks[6], d, d, dtype=dt,
+                               scale=1.0 / math.sqrt(d * 2 * cfg.n_layers),
+                               name_w="w_out"))
+    p["norm_g"] = jnp.ones((d,), dt)  # per-head group-norm scale
+    return p
+
+
+def _channel_mix_init(key, cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    p = {"mu": jnp.full((2, d), 0.5, dt)}
+    p.update(common.dense_init(ks[0], d, f, dtype=dt, name_w="w_up"))
+    p.update(common.dense_init(ks[1], f, d, dtype=dt,
+                               scale=1.0 / math.sqrt(f * 2 * cfg.n_layers),
+                               name_w="w_down"))
+    p.update(common.dense_init(ks[2], d, d, dtype=dt, name_w="w_r"))
+    return p
+
+
+def init(key, cfg: ModelConfig, **_) -> dict:
+    ks = jax.random.split(key, 3)
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.fold_in(ks[0], i)
+        layers.append({
+            "norm1": norm_init(cfg.d_model, dtype=dtype_of(cfg), kind=cfg.norm),
+            "tm": _time_mix_init(jax.random.fold_in(kk, 0), cfg),
+            "norm2": norm_init(cfg.d_model, dtype=dtype_of(cfg), kind=cfg.norm),
+            "cm": _channel_mix_init(jax.random.fold_in(kk, 1), cfg),
+        })
+    return {"tok": embed_init(ks[1], cfg),
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *layers),
+            "final_norm": norm_init(cfg.d_model, dtype=dtype_of(cfg),
+                                    kind=cfg.norm)}
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None):
+    """xs_t = x_{t−1}; position 0 sees `prev` (zeros at sequence start)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _decay(p, xw: jax.Array) -> jax.Array:
+    """Data-dependent per-channel log-decay (negative), Finch eq. w_t."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["decay_a"].astype(jnp.float32)) \
+        @ p["decay_b"].astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(p["decay_w0"] + lora, -8.0, 1.0))
+    return jnp.clip(logw, LOG_DECAY_FLOOR, -1e-4)
+
+
+def _group_norm(y: jax.Array, scale: jax.Array, n_heads: int) -> jax.Array:
+    b, t, d = y.shape
+    yh = y.reshape(b, t, n_heads, d // n_heads).astype(jnp.float32)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh * yh, -1, keepdims=True) + 1e-5)
+    return (yh.reshape(b, t, d) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def wkv6_chunked(r, k, v, logw, u, *, chunk: int, state0=None,
+                 unroll: bool = False):
+    """Chunked-parallel WKV6. r,k,v,logw [B,T,H,dh] → (y, final state).
+
+    All within-chunk exponents are differences of cumulative log-decays
+    (≤ |chunk·LOG_DECAY_FLOOR|), safe in f32 with chunk ≤ 32.
+    """
+    b, t, h, dh = r.shape
+    pad = (-t) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=-1e-4)
+    nc = (t + pad) // chunk
+    shp = (b, nc, chunk, h, dh)
+    rc, kc, vc = (a.reshape(shp).astype(jnp.float32) for a in (r, k, v))
+    lw = logw.reshape(shp)
+    cum = jnp.cumsum(lw, axis=2)                      # inclusive Σ log w
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+
+    def body(S, xs):
+        rcc, kcc, vcc, lwc, cumc = xs                # [B, C, H, dh]
+        a_ex = cumc - lwc                             # exclusive cumsum
+        r_dec = rcc * jnp.exp(a_ex)                   # r_i ⊙ Π_{l<i} w
+        k_dec = kcc * jnp.exp(-cumc)                  # k_j ⊘ Π_{l≤j} w
+        # intra-chunk attention (strictly causal) + bonus diagonal
+        att = jnp.einsum("bihd,bjhd->bhij", r_dec, k_dec)
+        att = jnp.tril(att, k=-1)
+        diag = jnp.einsum("bihd,bihd->bhi", rcc * u, kcc)
+        y = jnp.einsum("bhij,bjhd->bihd", att, vcc) \
+            + diag.transpose(0, 2, 1)[..., None] * vcc
+        # inter-chunk from carried state
+        y = y + jnp.einsum("bihk,bhkv->bihv", r_dec, S)
+        # state update: S' = diag(W_C)·S + Σ_j (k_j·W_C/W_j) ⊗ v_j
+        wc = jnp.exp(cumc[:, -1])                     # [B, H, dh]
+        S_add = jnp.einsum("bjhk,bjhv->bhkv", k_dec, vcc)
+        S_new = wc[..., None] * (S + S_add)
+        return S_new, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in
+               (rc, kc, vc, lw.astype(jnp.float32), cum.astype(jnp.float32)))
+    state, ys = jax.lax.scan(body, state0, xs, unroll=True if unroll else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, dh)[:, :t]
+    return y, state
+
+
+def _time_mix(p, x, cfg: ModelConfig, *, train, prev_x=None, state=None,
+              chunked=True):
+    """Returns (out, (last_x, state))."""
+    b, t, d = x.shape
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    xs = _token_shift(x, prev_x) if chunked else prev_x
+    mu = p["mu"].astype(x.dtype)
+    mix = lambda i: x + mu[i] * (xs - x)
+    rr = dense(p, mix(0), cfg, train=train, w="w_r", b=None)
+    kk = dense(p, mix(1), cfg, train=train, w="w_k", b=None)
+    vv = dense(p, mix(2), cfg, train=train, w="w_v", b=None)
+    gg = dense(p, mix(3), cfg, train=train, w="w_g", b=None)
+    logw = _decay(p, mix(4))                          # [B,T,D] f32
+    sh = (b, t, h, hd)
+    r4, k4, v4 = (a.reshape(sh) for a in (rr, kk, vv))
+    r4 = constrain(r4, "batch", None, "tp", None)
+    lw4 = logw.reshape(sh)
+    u4 = p["bonus_u"].reshape(h, hd)
+
+    if chunked:
+        y, state = wkv6_chunked(r4, k4, v4, lw4, u4, chunk=cfg.ssm.chunk,
+                                state0=state, unroll=not cfg.scan_layers)
+    else:  # exact single-token recurrence (decode)
+        r1, k1, v1 = (a[:, 0].astype(jnp.float32) for a in (r4, k4, v4))
+        w1 = jnp.exp(lw4[:, 0].astype(jnp.float32))
+        kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        y = jnp.einsum("bhk,bhkv->bhv", r1, state + u4[..., None] * kv)
+        state = w1[..., None] * state + kv
+        y = y[:, None]
+    y = _group_norm(y.reshape(b, t, d).astype(x.dtype), p["norm_g"], h)
+    y = y * jax.nn.silu(gg)
+    out = dense(p, y, cfg, train=train, w="w_out", b=None)
+    return constrain(out, *common.res_axes(cfg)), (x[:, -1:], state)
+
+
+def _channel_mix(p, x, cfg: ModelConfig, *, train, prev_x=None,
+                 chunked=True):
+    xs = _token_shift(x, prev_x) if chunked else prev_x
+    mu = p["mu"].astype(x.dtype)
+    xk = x + mu[0] * (xs - x)
+    xr = x + mu[1] * (xs - x)
+    kk = jax.nn.relu(dense(p, xk, cfg, train=train, w="w_up", b=None)) ** 2
+    vv = dense(p, kk, cfg, train=train, w="w_down", b=None)
+    rr = jax.nn.sigmoid(dense(p, xr, cfg, train=train, w="w_r", b=None))
+    return constrain(rr * vv, *common.res_axes(cfg)), x[:, -1:]
+
+
+def _layer(lp, h, cfg, *, train, cache=None, chunked=True):
+    """cache: {"tm_x", "cm_x": [B,1,D], "S": [B,H,dh,dh]} or None."""
+    c = cache or {}
+    a, (tm_x, S) = _time_mix(lp["tm"], norm(lp["norm1"], h, cfg), cfg,
+                             train=train, prev_x=c.get("tm_x"),
+                             state=c.get("S"), chunked=chunked)
+    h = h + a
+    f, cm_x = _channel_mix(lp["cm"], norm(lp["norm2"], h, cfg), cfg,
+                           train=train, prev_x=c.get("cm_x"), chunked=chunked)
+    h = h + f
+    return h, {"tm_x": tm_x, "cm_x": cm_x, "S": S}
+
+
+def _run(params, x, cfg: ModelConfig, *, train, caches=None, chunked=True):
+    def body(hh, xs):
+        lp, c = xs if caches is not None else (xs, None)
+        hh, new_c = _layer(lp, hh, cfg, train=train, cache=c, chunked=chunked)
+        return hh, new_c
+
+    body_fn = jax.checkpoint(
+        body, policy=common.remat_policy(cfg)
+    ) if (cfg.remat and train) else body
+    xs = (params["layers"], caches) if caches is not None else params["layers"]
+    return common.scan_layers(body_fn, x, xs, unroll=not cfg.scan_layers)
+
+
+def train_loss(params, batch, cfg: ModelConfig, rng=None):
+    x = embed_lookup(params["tok"], batch["tokens"], cfg)
+    h, _ = _run(params, x, cfg, train=True)
+    h = norm(params["final_norm"], h, cfg)
+    logits = unembed(params["tok"], h, cfg, train=True)
+    return cross_entropy(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    h = d // hd
+    L = cfg.n_layers
+    dt = dtype_of(cfg)
+    return {"pos": jnp.zeros((), jnp.int32),
+            "layers": {"tm_x": jnp.zeros((L, batch, 1, d), dt),
+                       "cm_x": jnp.zeros((L, batch, 1, d), dt),
+                       "S": jnp.zeros((L, batch, h, hd, hd), jnp.float32)}}
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len=None):
+    x = embed_lookup(params["tok"], batch["tokens"], cfg)
+    h, caches = _run(params, x, cfg, train=False,
+                     caches=init_cache(cfg, x.shape[0], 0)["layers"],
+                     chunked=True)
+    h = norm(params["final_norm"], h, cfg)
+    logits = unembed(params["tok"], h[:, -1], cfg)
+    cache = {"pos": jnp.full((), batch["tokens"].shape[1], jnp.int32),
+             "layers": caches}
+    return logits, cache
+
+
+def decode_step(params, tokens, cache, cfg: ModelConfig):
+    x = embed_lookup(params["tok"], tokens, cfg)
+    h, new_layers = _run(params, x, cfg, train=False,
+                         caches=cache["layers"], chunked=False)
+    h = norm(params["final_norm"], h, cfg)
+    logits = unembed(params["tok"], h[:, 0], cfg)
+    return logits, {"pos": cache["pos"] + 1, "layers": new_layers}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}

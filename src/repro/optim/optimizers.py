@@ -1,0 +1,117 @@
+"""Pure-JAX optimizers (no optax in this environment).
+
+AdamW keeps f32 m/v state (standard for ≤10B-class models); Adafactor keeps
+factored f32 second moments (row/col means) so the 671B-class archs fit the
+optimizer state in HBM — the state for a [d1, d2] matrix is d1 + d2 floats
+instead of 2·d1·d2.
+
+API: opt = adamw(lr_fn, ...); state = opt.init(params);
+     updates, state = opt.update(grads, state, params); params += updates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable
+
+
+def _tmap(f, *trees):
+    return jax.tree.map(f, *trees)
+
+
+def global_norm_clip(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return _tmap(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                 grads), gn
+
+
+def apply_updates(params, updates):
+    return _tmap(lambda p, u: (p.astype(jnp.float32)
+                               + u.astype(jnp.float32)).astype(p.dtype),
+                 params, updates)
+
+
+def adamw(lr_fn: Callable[[jax.Array], jax.Array], *, b1=0.9, b2=0.95,
+          eps=1e-8, weight_decay=0.01) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(zeros, params), "v": _tmap(zeros, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        m = _tmap(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v_, g: b2 * v_ + (1 - b2)
+                  * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = _tmap(
+            lambda m_, v_, p: -lr * ((m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+                                     + weight_decay * p.astype(jnp.float32)),
+            m, v, params)
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr_fn: Callable[[jax.Array], jax.Array], *, decay=0.8,
+              eps=1e-30, clip_threshold=1.0, weight_decay=0.0) -> Optimizer:
+    """Momentum-free Adafactor (Shazeer & Stern 2018), factored ≥2-D stats."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32), "stats": _tmap(one, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        beta = 1.0 - (step.astype(jnp.float32)) ** (-decay)
+
+        def one(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.maximum(
+                    jnp.mean(vr, axis=-1, keepdims=True), eps)
+                precond = gf / (jnp.sqrt(r)[..., None]
+                                * jnp.sqrt(vc)[..., None, :])
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                precond = gf / jnp.sqrt(v)
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + 1e-12)
+            precond = precond / jnp.maximum(1.0, rms / clip_threshold)
+            upd = -lr * (precond + weight_decay * p.astype(jnp.float32))
+            return upd, new_s
+
+        flat_g, td = jax.tree.flatten(grads)
+        flat_s = td.flatten_up_to(state["stats"])
+        flat_p = td.flatten_up_to(params)
+        outs = [one(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        upd = td.unflatten([o[0] for o in outs])
+        stats = td.unflatten([o[1] for o in outs])
+        return upd, {"step": step, "stats": stats}
+
+    return Optimizer(init, update)

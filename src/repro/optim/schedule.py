@@ -1,0 +1,18 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    """Linear warmup → cosine decay to floor·peak."""
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5
+                         * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(s < warmup_steps, warm, cos)
+    return lr

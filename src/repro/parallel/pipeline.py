@@ -1,0 +1,74 @@
+"""GPipe-style pipeline parallelism over a mesh "stage" axis.
+
+Provided as the PP building block for depth-dominated configs (the
+production dry-run meshes use DP×TP×EP only — at ≤61 layers with scanned
+stacks PP is not needed to fit, so this module is exercised by tests rather
+than the default launch path).
+
+Schedule: classic fill-drain loop. At tick t, stage s processes microbatch
+(t − s); activations hop stage→stage+1 through jax.lax.ppermute. All stages
+run the same program (SPMD), each applying its own slice of the stacked
+stage parameters.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh,
+                   axis: str = "stage"):
+    """Run `n_micro` microbatches through `n_stages` pipeline stages.
+
+    stage_fn(params_slice, h) → h            (one stage's computation)
+    stage_params: pytree with leading [n_stages] dim, sharded on `axis`
+    x_micro: [n_micro, mb, ...] microbatched inputs (replicated)
+    Returns [n_micro, mb, ...] outputs (as produced by the LAST stage).
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    assert n_micro >= n_stages, "need ≥ n_stages microbatches to fill"
+
+    def per_stage(params_local, xs):
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        sid = jax.lax.axis_index(axis)
+        ticks = n_micro + n_stages - 1
+        h = jnp.zeros_like(xs[0])
+        outs = jnp.zeros_like(xs)
+
+        def body(carry, t):
+            h_in, outs = carry
+            # stage 0 ingests microbatch t (when valid); others use h_in
+            feed = jnp.where(t < n_micro, t, 0)
+            h_cur = jnp.where(sid == 0, xs[feed], h_in)
+            active = (t - sid >= 0) & (t - sid < n_micro)
+            h_out = stage_fn(params_local, h_cur)
+            h_out = jnp.where(active, h_out, h_cur)
+            # last stage records its finished microbatch
+            mb = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+            record = active & (sid == n_stages - 1)
+            outs = jax.lax.dynamic_update_index_in_dim(
+                outs, jnp.where(record, h_out, outs[mb]), mb, 0)
+            # hop to the next stage
+            h_next = jax.lax.ppermute(
+                h_out, axis, [(i, (i + 1) % n_stages)
+                              for i in range(n_stages)])
+            return (h_next, outs), None
+
+        (_, outs), _ = jax.lax.scan(body, (h, outs), jnp.arange(ticks))
+        # only the last stage holds real outputs; broadcast them
+        outs = jax.lax.ppermute(
+            outs, axis, [((n_stages - 1 + i) % n_stages, i)
+                         for i in range(n_stages)])
+        return outs
+
+    return jax.shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(jax.tree.map(lambda _: P(axis), stage_params,
+                               is_leaf=lambda x: hasattr(x, "shape")), P()),
+        out_specs=P(),
+        check_vma=False,
+    )(stage_params, x_micro)

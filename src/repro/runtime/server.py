@@ -1,0 +1,145 @@
+"""Slot-based batched serving loop (continuous-batching-lite).
+
+A fixed pool of B slots shares one batched KV cache. Requests are prefillled
+individually (jit'd per prompt-length bucket) and spliced into the batched
+cache at their slot; every step() advances all active slots with one jit'd
+decode_step. Greedy sampling; EOS/max-token retirement frees slots for
+queued requests — the standard production decode loop shape, minus RPC.
+
+Per-slot position bookkeeping uses one shared `pos` when all slots advance
+together; slot-local lengths mask finished slots (their logits are computed
+but discarded — the usual padding-slot trade).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the server:
+    rid: int = -1
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
+                 max_len: int):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.mod = registry.get_module(cfg)
+        self.cache = jax.jit(
+            lambda: self.mod.init_cache(cfg, n_slots, max_len))()
+        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.slot_len = np.zeros(n_slots, np.int32)
+        self.queue: list[Request] = []
+        self._next_rid = 0
+        self._decode = jax.jit(
+            lambda p, t, c: self.mod.decode_step(p, t, c, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: self.mod.prefill(p, b, cfg, max_len=max_len),
+            static_argnames=())
+        self.steps_run = 0
+
+    # -- request lifecycle ---------------------------------------------------
+    def submit(self, req: Request) -> int:
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(req)
+        self._admit()
+        return req.rid
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into(slot, req)
+
+    def _prefill_into(self, slot: int, req: Request):
+        tokens = jnp.asarray([req.prompt], jnp.int32)
+        batch = {"tokens": tokens}
+        logits, rcache = self._prefill(self.params, batch)
+        first = int(jnp.argmax(logits[0]))
+        req.output.append(first)
+        self.slot_req[slot] = req
+        self.slot_len[slot] = len(req.prompt)
+        self.cache = _splice(self.cache, rcache, slot)
+
+    # -- decode loop ----------------------------------------------------------
+    def step(self):
+        """One decode step for all slots; retire finished requests."""
+        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        if not active:
+            return
+        toks = np.zeros((self.n_slots, 1), np.int32)
+        for s in active:
+            toks[s, 0] = self.slot_req[s].output[-1]
+        # align the shared cache position to the deepest slot
+        pos = int(max(self.slot_len[s] + len(self.slot_req[s].output) - 1
+                      for s in active))
+        self.cache["pos"] = jnp.asarray(pos, jnp.int32)
+        logits, self.cache = self._decode(self.params, jnp.asarray(toks),
+                                          self.cache)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for s in active:
+            req = self.slot_req[s]
+            req.output.append(int(nxt[s]))
+            exhausted = len(req.output) >= req.max_new_tokens
+            hit_eos = req.eos_id is not None and int(nxt[s]) == req.eos_id
+            if exhausted or hit_eos or pos + 1 >= self.max_len - 1:
+                req.done = True
+                self.slot_req[s] = None
+                self.slot_len[s] = 0
+        self.steps_run += 1
+        self._admit()
+
+    def run_until_drained(self, max_steps: int = 10_000):
+        while any(self.slot_req) or self.queue:
+            self.step()
+            if self.steps_run > max_steps:
+                raise RuntimeError("serving loop did not drain")
+
+
+def _splice(batched_cache, request_cache, slot: int):
+    """Insert a 1-deep request cache into the batched cache at `slot`.
+
+    Both caches share the layout produced by init_cache / prefill; every
+    array's batch axis is axis 1 for stacked [L, B, ...] entries. Scalars
+    ("pos") take the max so the shared clock covers the deepest slot.
+    """
+    def one(dst, src):
+        if dst.ndim == 0:
+            return jnp.maximum(dst, src).astype(dst.dtype)
+        # request caches have batch=1 at the same axis as dst's B
+        axis = 1 if dst.ndim > 1 else 0
+        start = [0] * dst.ndim
+        start[axis] = slot
+        src = src.astype(dst.dtype)
+        if src.shape[axis] != 1:
+            src = jnp.take(src, jnp.arange(1), axis=axis)
+        # pad/trim sequence axes to dst
+        for ax in range(dst.ndim):
+            if ax != axis and src.shape[ax] != dst.shape[ax]:
+                if src.shape[ax] < dst.shape[ax]:
+                    pad = [(0, 0)] * dst.ndim
+                    pad[ax] = (0, dst.shape[ax] - src.shape[ax])
+                    src = jnp.pad(src, pad)
+                else:
+                    src = jnp.take(src, jnp.arange(dst.shape[ax]), axis=ax)
+        return jax.lax.dynamic_update_slice(dst, src, tuple(start))
+
+    return jax.tree.map(one, batched_cache, request_cache)

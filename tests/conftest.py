@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests run single-device (smoke configs); the dry-run subprocess tests set
+# their own XLA_FLAGS — never set device-count flags here (per the brief).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

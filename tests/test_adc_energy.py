@@ -1,0 +1,82 @@
+"""TD-ADC transfer model + Eq. 4 energy model against paper anchors."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import PROTOTYPE, Scheme
+from repro.core.adc import adc_quantize, inl_curve
+from repro.core.energy import (compute_density_tops_mm2, macro_throughput_gops,
+                               mvm_energy)
+from repro.core.macro import GEOMETRY, MacroConfig, OperatingPoint
+
+
+def test_adc_transfer_monotone_and_clipped():
+    v = jnp.linspace(-1000.0, 40000.0, 2048)
+    q = adc_quantize(v, PROTOTYPE, dequantize=False)
+    assert float(q.min()) == 0.0
+    assert float(q.max()) == PROTOTYPE.adc_levels - 1
+    assert bool(jnp.all(jnp.diff(q) >= 0))
+
+
+def test_inl_curve_bounded():
+    x = jnp.linspace(0, 1, 512)
+    for seed in range(5):
+        c = inl_curve(x, 1.10, seed)
+        assert float(jnp.max(jnp.abs(c))) <= 1.10 + 1e-6
+
+
+def test_effective_resolution_derates_at_low_vdd():
+    lo = dataclasses.replace(PROTOTYPE, op=OperatingPoint(vdd=0.65))
+    assert lo.effective_adc_levels() == 256  # 8-bit floor (paper §V-B)
+    assert PROTOTYPE.effective_adc_levels() == 362
+
+
+def test_sigma_e_calibration_point():
+    assert abs(PROTOTYPE.sigma_e_lsb() - 0.59) < 1e-6  # Fig. 16(b)
+
+
+def test_energy_anchors_match_fig21():
+    c065 = dataclasses.replace(PROTOTYPE, op=OperatingPoint(vdd=0.65))
+    c120 = dataclasses.replace(PROTOTYPE, op=OperatingPoint(vdd=1.2))
+    assert abs(mvm_energy(c065, 144).tops_per_w - 40.2) < 0.5
+    assert abs(mvm_energy(c120, 144).tops_per_w - 18.6) < 0.5
+
+
+def test_throughput_anchors_match_table1():
+    c065 = dataclasses.replace(PROTOTYPE, op=OperatingPoint(vdd=0.65))
+    c120 = dataclasses.replace(PROTOTYPE, op=OperatingPoint(vdd=1.2))
+    assert abs(macro_throughput_gops(c065) - 3.8) < 0.2
+    assert abs(macro_throughput_gops(c120) - 50.3) < 1.0
+    assert abs(compute_density_tops_mm2(c120) - 0.68) < 0.02
+
+
+def test_memory_density_matches_table1():
+    assert abs(GEOMETRY.density_kb_mm2 - 547.3) < 1.0  # 40.5Kb / 0.074mm²
+
+
+def test_scheme_energy_ordering():
+    """Eq. 4: at the same macro resolution BS costs the most (B_A·B_W ADC
+    conversions), WBS in between, BP the least."""
+    e = {}
+    for s in (Scheme.BP, Scheme.WBS, Scheme.BS):
+        cfg = dataclasses.replace(PROTOTYPE, scheme=s)
+        e[s] = mvm_energy(cfg, 144).e_mvm_j
+    assert e[Scheme.BP] < e[Scheme.WBS] < e[Scheme.BS]
+
+
+def test_dual_threshold_saves_adc_energy():
+    from repro.core.adc import adc_energy_j
+    on = adc_energy_j(PROTOTYPE, dual_threshold=True)
+    off = adc_energy_j(PROTOTYPE, dual_threshold=False)
+    assert abs(1 - on / off - 0.558) < 1e-6  # measured 55.8 % reduction
+
+
+def test_operating_point_validation():
+    with pytest.raises(ValueError):
+        OperatingPoint(vdd=0.4)
+    with pytest.raises(ValueError):
+        OperatingPoint(temp_c=150.0)
+    with pytest.raises(ValueError):
+        MacroConfig(gain=8.0)

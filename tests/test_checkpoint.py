@@ -1,0 +1,66 @@
+"""Checkpoint atomicity, bf16 roundtrip, keep-N, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_pytree, save_pytree
+
+
+def _tree(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(key, (8, 16)),
+        "nested": {"b": jax.random.normal(key, (4,)).astype(jnp.bfloat16),
+                   "c": jnp.arange(5, dtype=jnp.int32)},
+        "scalar": jnp.asarray(3, jnp.int32),
+    }
+
+
+def test_roundtrip_including_bf16(tmp_path):
+    t = _tree()
+    save_pytree(str(tmp_path / "ck"), t, metadata={"step": 7})
+    like = jax.eval_shape(lambda: t)
+    out, md = load_pytree(str(tmp_path / "ck"), like)
+    assert md["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_keep_n_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, _tree(s))
+    assert mgr.steps() == [30, 40]
+    assert mgr.latest_step() == 40
+
+
+def test_restore_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _tree(1))
+    mgr.save(2, _tree(2))
+    like = jax.eval_shape(lambda: _tree(0))
+    out, md = mgr.restore(like)
+    assert md["step"] == 2
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(_tree(2)["a"]))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    save_pytree(str(tmp_path / "ck"), {"a": jnp.ones((4,))})
+    like = {"a": jax.ShapeDtypeStruct((5,), jnp.float32)}
+    with pytest.raises(ValueError):
+        load_pytree(str(tmp_path / "ck"), like)
+
+
+def test_atomic_overwrite(tmp_path):
+    """Re-saving the same step replaces the directory without tmp residue."""
+    p = str(tmp_path / "ck")
+    save_pytree(p, {"a": jnp.ones((2,))})
+    save_pytree(p, {"a": jnp.zeros((2,))})
+    out, _ = load_pytree(p, {"a": jax.ShapeDtypeStruct((2,), jnp.float32)})
+    assert float(out["a"].sum()) == 0.0
+    assert not [d for d in os.listdir(tmp_path) if ".tmp" in d]

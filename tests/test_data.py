@@ -1,0 +1,33 @@
+"""Data pipeline: determinism, elasticity, learnability structure."""
+import numpy as np
+
+from repro.data.tokens import SyntheticLMDataset
+
+
+def test_batches_are_deterministic():
+    a = SyntheticLMDataset(512, 32, 8, seed=3).batch(5)
+    b = SyntheticLMDataset(512, 32, 8, seed=3).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_labels_are_shifted_tokens():
+    d = SyntheticLMDataset(512, 32, 4).batch(0)
+    np.testing.assert_array_equal(d["tokens"][:, 1:], d["labels"][:, :-1])
+
+
+def test_elastic_host_sharding_reconstructs_global_batch():
+    """2 hosts × half-batch vs 1 host × full batch — host shards differ by
+    host_id but each host's stream is reproducible independently."""
+    h0 = SyntheticLMDataset(512, 16, 8, n_hosts=2, host_id=0)
+    h1 = SyntheticLMDataset(512, 16, 8, n_hosts=2, host_id=1)
+    assert h0.host_batch == h1.host_batch == 4
+    b0, b1 = h0.batch(3), h1.batch(3)
+    assert not np.array_equal(b0["tokens"], b1["tokens"])
+    # restart reproducibility at any step
+    np.testing.assert_array_equal(h0.batch(3)["tokens"], b0["tokens"])
+
+
+def test_vocab_bounds():
+    d = SyntheticLMDataset(100, 64, 4).batch(0)
+    assert d["tokens"].min() >= 0 and d["tokens"].max() < 100

@@ -1,0 +1,47 @@
+"""HLO collective parser + roofline arithmetic."""
+import pytest
+
+from repro.analysis.hlo import collective_bytes
+from repro.analysis.roofline import Roofline
+
+HLO = """
+HloModule test
+%add { ... }
+%param.3 = bf16[256,14336]{1,0} parameter(0)
+%wrapped_convert.1 = f32[4096,512]{1,0} fusion(%param.3)
+%all-gather = f32[4096,512]{1,0} all-gather(%wrapped_convert.1), dimensions={0}
+%all-reduce = f32[] all-reduce(%wrapped_reduce), to_apply=%add
+%wrapped_reduce = f32[128,64]{1,0} fusion(%all-gather)
+%rs = bf16[8,16]{1,0} reduce-scatter(%wrapped_reduce), dimensions={0}
+%a2a = (f32[2,4]{1,0}, f32[2,4]{1,0}) all-to-all(%x, %y)
+%x = f32[2,4]{1,0} parameter(1)
+%y = f32[2,4]{1,0} parameter(2)
+%cp = f32[16]{0} collective-permute(%x), source_target_pairs={{0,1}}
+"""
+
+
+def test_collective_byte_accounting():
+    st = collective_bytes(HLO)
+    assert st.count_by_kind == {"all-gather": 1, "all-reduce": 1,
+                                "reduce-scatter": 1, "all-to-all": 1,
+                                "collective-permute": 1}
+    assert st.bytes_by_kind["all-gather"] == 4096 * 512 * 4
+    assert st.bytes_by_kind["all-reduce"] == 128 * 64 * 4
+    assert st.bytes_by_kind["reduce-scatter"] == 128 * 64 * 4
+    assert st.bytes_by_kind["all-to-all"] == 2 * (2 * 4 * 4)
+    assert st.bytes_by_kind["collective-permute"] == 2 * 4 * 4
+
+
+def test_roofline_terms_and_dominance():
+    rl = Roofline(arch="x", shape="train_4k", mesh="m", chips=256,
+                  hlo_flops=197e12, hlo_bytes=819e9 * 2,
+                  collective_bytes=50e9 * 0.5,
+                  model_flops=197e12 * 256 * 0.8,
+                  peak_bytes_per_chip=0, collective_detail={})
+    assert rl.t_compute == pytest.approx(1.0)
+    assert rl.t_memory == pytest.approx(2.0)
+    assert rl.t_collective == pytest.approx(0.5)
+    assert rl.dominant == "memory"
+    assert rl.useful_ratio == pytest.approx(0.8)
+    # bound = 2 s → achieved useful flops/s per chip = 0.8·197e12/2
+    assert rl.roofline_fraction == pytest.approx(0.4)

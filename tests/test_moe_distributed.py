@@ -1,0 +1,64 @@
+"""Distributed MoE correctness: psum-EP and a2a-EP must equal the local
+(no-mesh) reference bit-for-bit up to f32 tolerance. Runs in a subprocess
+with 4 forced host devices (mesh 2×2: data×model)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import moe
+from repro.parallel import sharding
+
+cfg = ModelConfig(arch="t", family="moe", n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=16, vocab=64, dtype="float32",
+                  moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=16,
+                                capacity_factor=8.0))
+key = jax.random.PRNGKey(0)
+p = moe.init(key, cfg)
+x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 32))
+
+sharding.set_mesh(None)
+y_local, aux_local = moe.apply(p, x, cfg, train=False)
+
+mesh = jax.make_mesh((2, 2), ("data", "model"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+sharding.set_mesh(mesh)
+with mesh:
+    y_psum, aux_psum = jax.jit(
+        lambda pp, xx: moe.apply(pp, xx, cfg, train=False))(p, x)
+    cfg_a2a = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, ep_mode="a2a"))
+    y_a2a, aux_a2a = jax.jit(
+        lambda pp, xx: moe.apply(pp, xx, cfg_a2a, train=False))(p, x)
+
+np.testing.assert_allclose(np.asarray(y_psum), np.asarray(y_local),
+                           rtol=2e-5, atol=2e-5)
+np.testing.assert_allclose(np.asarray(y_a2a), np.asarray(y_local),
+                           rtol=2e-5, atol=2e-5)
+# the aux load-balance loss is a shard-local estimator averaged across
+# shards (GShard-style): Σ_e mean_shard(f_e·p_e) ≠ global Σ_e f_e·p_e
+# exactly — outputs above are exact, aux agrees to a few percent
+np.testing.assert_allclose(float(aux_psum), float(aux_local), rtol=5e-2)
+np.testing.assert_allclose(float(aux_a2a), float(aux_local), rtol=5e-2)
+print("MOE_DISTRIBUTED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_moe_psum_and_a2a_match_local_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MOE_DISTRIBUTED_OK" in proc.stdout

@@ -1,0 +1,71 @@
+"""Optimizers: convergence on a quadratic, factored-state shapes, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adafactor, adamw, apply_updates, cosine_warmup, \
+    global_norm_clip
+
+
+def _quadratic_target():
+    key = jax.random.PRNGKey(0)
+    target = {"w": jax.random.normal(key, (8, 4)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (4,))}
+    params = jax.tree.map(jnp.zeros_like, target)
+
+    def loss(p):
+        return sum(jnp.sum((a - t) ** 2) for a, t in
+                   zip(jax.tree.leaves(p), jax.tree.leaves(target)))
+
+    return params, loss
+
+
+def _run(opt, params, loss, steps=200):
+    state = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss(params))
+
+
+def test_adamw_converges():
+    params, loss = _quadratic_target()
+    opt = adamw(lambda s: 0.05, weight_decay=0.0)
+    assert _run(opt, params, loss) < 1e-2
+
+
+def test_adafactor_converges():
+    # adafactor's rms clipping makes |update| ≈ lr, so (as in the paper) the
+    # schedule must decay: relative step ∝ 1/√t
+    import jax.numpy as jnp
+    params, loss = _quadratic_target()
+    opt = adafactor(lambda s: 0.5 / jnp.sqrt(s.astype(jnp.float32)),
+                    weight_decay=0.0)
+    assert _run(opt, params, loss, steps=500) < 5e-2
+
+
+def test_adafactor_state_is_factored():
+    params = {"w": jnp.zeros((128, 64)), "s": jnp.zeros((7,))}
+    opt = adafactor(lambda s: 1e-3)
+    st = opt.init(params)
+    assert st["stats"]["w"]["vr"].shape == (128,)
+    assert st["stats"]["w"]["vc"].shape == (64,)
+    assert st["stats"]["s"]["v"].shape == (7,)
+    total_stats = sum(x.size for x in jax.tree.leaves(st["stats"]))
+    assert total_stats == 128 + 64 + 7  # ≪ 2·(128·64)
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, gn = global_norm_clip(g, 1.0)
+    assert float(gn) == 20.0
+    np.testing.assert_allclose(np.asarray(clipped["a"]), 0.5, rtol=1e-6)
+
+
+def test_cosine_warmup_shape():
+    lr = cosine_warmup(1.0, 10, 100)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(10))) == 1.0
+    assert 0.09 < float(lr(jnp.asarray(100))) < 0.11
+    assert float(lr(jnp.asarray(55))) < 1.0

@@ -1,0 +1,21 @@
+"""Pipeline-parallel stage scan: fill-drain schedule correctness on a
+1-stage mesh (semantics) — multi-stage behaviour is exercised in the
+dry-run subprocess environment where >1 host device exists."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.pipeline import pipeline_apply
+
+
+def test_single_stage_pipeline_is_identity_schedule():
+    mesh = jax.make_mesh((1,), ("stage",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    w = jnp.asarray([[2.0]])  # one stage: h → 2h
+
+    def stage(params, h):
+        return h * params[0, 0]
+
+    x = jnp.arange(6.0).reshape(3, 2)[:, None, :]  # 3 microbatches of [1,2]
+    out = pipeline_apply(stage, w[None], x, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x * 2.0))

@@ -1,0 +1,76 @@
+"""Quantizer + STE unit and property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (ActQuantConfig, WeightQuantConfig, act_scale,
+                              bit_planes, clip_ste, fake_quant_unsigned,
+                              quantize_act, quantize_weight, round_ste,
+                              weight_scale)
+
+
+def test_round_ste_forward_and_grad():
+    x = jnp.array([0.2, 0.5, 1.7, -1.2])
+    assert jnp.allclose(round_ste(x), jnp.round(x))
+    g = jax.grad(lambda v: jnp.sum(round_ste(v)))(x)
+    assert jnp.allclose(g, 1.0)  # Eq. 5: derivative taken as identity
+
+
+def test_clip_ste_grad_is_identity():
+    x = jnp.array([-5.0, 0.3, 9.0])
+    g = jax.grad(lambda v: jnp.sum(clip_ste(v, 0.0, 1.0)))(x)
+    assert jnp.allclose(g, 1.0)
+
+
+def test_weight_codes_cover_unsigned_range():
+    cfg = WeightQuantConfig()
+    w = jnp.linspace(-1.0, 1.0, 64)
+    s = weight_scale(w, cfg)
+    codes = quantize_weight(w, s, cfg)
+    assert float(codes.min()) >= 0.0 and float(codes.max()) <= 15.0
+    # Eq. 7 mapping: -8..7 → 0..15, zero maps to 8
+    z = quantize_weight(jnp.zeros(3), s, cfg)
+    assert jnp.allclose(z, 8.0)
+
+
+def test_act_codes_nonneg_relu_case():
+    cfg = ActQuantConfig()
+    x = jax.nn.relu(jax.random.normal(jax.random.PRNGKey(0), (128,)))
+    s = act_scale(x, cfg)
+    q, zp = quantize_act(x, s, cfg)
+    assert float(zp) == 0.0  # paper's unsigned DAC case
+    assert float(q.min()) >= 0 and float(q.max()) <= 15
+
+
+def test_bit_planes_reconstruct():
+    q = jnp.arange(16.0)
+    planes = bit_planes(q, 4)
+    recon = sum((2 ** p) * planes[p] for p in range(4))
+    assert jnp.allclose(recon, q)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                min_size=2, max_size=64),
+       st.integers(2, 8))
+def test_fake_quant_error_bound(vals, bits):
+    x = jnp.asarray(vals, jnp.float32)
+    x = x - jnp.min(jnp.minimum(x, 0))  # unsigned quantizer: x ≥ 0
+    scale = jnp.maximum(jnp.max(x), 1e-6) / ((1 << bits) - 1)
+    y = fake_quant_unsigned(x, bits, scale)
+    assert float(jnp.max(jnp.abs(y - x))) <= float(scale) / 2 + 1e-5
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_affine_quant_roundtrip_random(seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,)) * jax.random.uniform(key, (), minval=0.1,
+                                                            maxval=10.0)
+    cfg = ActQuantConfig()
+    s = act_scale(x, cfg)
+    q, zp = quantize_act(x, s, cfg)
+    x_hat = (q - zp) * s
+    assert float(jnp.max(jnp.abs(x_hat - x))) <= float(s) * 0.51 + 1e-6

@@ -1,0 +1,70 @@
+"""Logical-axis sharding rules: divisibility fallback, optimizer-state
+inheritance, cache specs."""
+import types
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel import sharding
+
+
+@pytest.fixture
+def fake_mesh(monkeypatch):
+    mesh = types.SimpleNamespace(
+        axis_names=("pod", "data", "model"),
+        shape={"pod": 2, "data": 16, "model": 16})
+    monkeypatch.setattr(sharding, "_MESH", mesh)
+    return mesh
+
+
+def test_spec_divisible(fake_mesh):
+    spec = sharding.spec_for((4096, 14336), ("fsdp", "tp"))
+    assert spec == P("data", "model")
+
+
+def test_spec_drops_nondivisible(fake_mesh):
+    # 8 kv heads on a 16-way model axis → replicate (Megatron fallback)
+    spec = sharding.spec_for((4096, 8), ("fsdp", "tp"))
+    assert spec == P("data", None)
+
+
+def test_batch_resolves_to_pod_and_data(fake_mesh):
+    spec = sharding.spec_for((256, 4096), ("batch", None))
+    assert spec == P(("pod", "data"), None)
+    # batch=1 (long_500k) cannot shard 32 ways → dropped
+    spec = sharding.spec_for((1, 4096), ("batch", None))
+    assert spec == P(None, None)
+
+
+def test_seq_axis_combines_data_and_model(fake_mesh):
+    spec = sharding.spec_for((1, 524288), (None, "seq"))
+    assert spec == P(None, ("data", "model"))
+
+
+def test_param_rules_attention(fake_mesh):
+    assert sharding.axes_for(("layers", "attn", "wq"), 3) == (None, "fsdp",
+                                                              "tp")
+    assert sharding.axes_for(("tok", "embed"), 2) == ("tp", "fsdp")
+
+
+def test_adafactor_stats_inherit_param_rules(fake_mesh):
+    # e_gate is [L,E,D,F] → vr (row means) is [L,E,D], vc is [L,E,F];
+    # base rules ("expert","fsdp",None): vr drops last dim, vc drops middle
+    assert sharding.axes_for(("stats", "layers", "ffn", "e_gate", "vr"),
+                             3) == (None, "expert", "fsdp")
+    assert sharding.axes_for(("stats", "layers", "ffn", "e_gate", "vc"),
+                             3) == (None, "expert", None)
+
+
+def test_adamw_state_uses_param_name(fake_mesh):
+    # m/v mirror the params tree: last key is the param name itself
+    assert sharding.axes_for(("m", "layers", "ffn", "w_up"), 3) == (
+        None, "fsdp", "tp")
+
+
+def test_no_mesh_means_no_constraints():
+    sharding.set_mesh(None)
+    x = jax.numpy.ones((4, 4))
+    assert sharding.constrain(x, "batch", None) is x
+    assert sharding.tree_shardings({"a": x}) is None

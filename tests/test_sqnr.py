@@ -1,0 +1,52 @@
+"""Monte-Carlo SQNR harness vs the paper's §II-A quantitative claims."""
+import dataclasses
+
+import pytest
+
+from repro.core import PROTOTYPE, Scheme
+from repro.core.sqnr import simulate_sqnr
+
+N_FAST = 1 << 13  # enough Monte-Carlo for ±0.5 dB on these comparisons
+
+
+def _sqnr(scheme, **kw):
+    cfg = dataclasses.replace(PROTOTYPE, scheme=scheme,
+                              **{k: v for k, v in kw.items()
+                                 if k in ("adc_levels", "n_rows")})
+    return simulate_sqnr(cfg, k=144, n_samples=N_FAST)
+
+
+def test_fig2b_bp_beats_wbs_and_bs_at_iso_energy():
+    """Fig. 2(b): levels 1024/256/32 are iso-energy; BP +7.8 dB over WBS,
+    +21.6 dB over BS."""
+    bp = _sqnr(Scheme.BP, adc_levels=1024)
+    wbs = _sqnr(Scheme.WBS, adc_levels=256)
+    bs = _sqnr(Scheme.BS, adc_levels=32)
+    assert abs(bp.energy_per_mvm_j - wbs.energy_per_mvm_j) / bp.energy_per_mvm_j < 0.01
+    assert abs(bp.energy_per_mvm_j - bs.energy_per_mvm_j) / bp.energy_per_mvm_j < 0.01
+    assert abs((bp.sqnr_db - wbs.sqnr_db) - 7.8) < 1.5
+    assert abs((bp.sqnr_db - bs.sqnr_db) - 21.6) < 2.0
+
+
+def test_fig2a_ordering_at_fixed_levels():
+    """Fig. 2(a): levels=64; BP(N=9) ≈ +1.8 dB over WBS(N=36), +3.5 over
+    BS(N=144)."""
+    bp = _sqnr(Scheme.BP, adc_levels=64, n_rows=9)
+    wbs = _sqnr(Scheme.WBS, adc_levels=64, n_rows=36)
+    bs = _sqnr(Scheme.BS, adc_levels=64, n_rows=144)
+    assert bp.sqnr_db > wbs.sqnr_db > bs.sqnr_db
+    assert abs((bp.sqnr_db - wbs.sqnr_db) - 1.8) < 1.0
+    assert abs((bp.sqnr_db - bs.sqnr_db) - 3.5) < 1.5
+
+
+def test_one_extra_adc_bit_gives_6db():
+    lo = _sqnr(Scheme.BP, adc_levels=181)
+    hi = _sqnr(Scheme.BP, adc_levels=362)
+    assert abs((hi.sqnr_db - lo.sqnr_db) - 6.0) < 1.0
+
+
+def test_halving_n_gives_3db():
+    """§II-A: halving N only buys ~3 dB (digital accumulation of errors)."""
+    n144 = _sqnr(Scheme.BP, adc_levels=362, n_rows=144)
+    n72 = _sqnr(Scheme.BP, adc_levels=362, n_rows=72)
+    assert abs((n72.sqnr_db - n144.sqnr_db) - 3.0) < 1.2
