@@ -1,13 +1,14 @@
 """cim_mvm Pallas kernel micro-bench: interpret-mode wall time vs the jnp
 reference across tile shapes (structural check — real perf is a TPU matter,
-the §Perf roofline reasons from the lowered IR)."""
+the §Perf roofline reasons from the lowered IR), plus a packed-vs-unpacked
+decode-shape sweep quantifying the nibble-packing HBM win."""
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.macro import MacroConfig
-from repro.kernels.ops import cim_mvm_pallas
+from repro.kernels.ops import cim_mvm_pallas, cim_mvm_pallas_packed, pack_codes
 from repro.kernels.ref import cim_mvm_ref
 
 from .common import row, timeit
@@ -33,6 +34,35 @@ def run():
         us = timeit(fn, x, w)
         out.append(row(f"kernel_pallas_bm{bm}_bn{bn}", us,
                        f"interpret_mode|vs_ref={us / max(us_ref, 1e-9):.2f}x"))
+    out += run_packed_sweep()
+    return out
+
+
+def run_packed_sweep():
+    """Packed vs unpacked weights across decode shapes (small M = batch
+    slots, big K×N = the weight matrix that dominates decode HBM traffic).
+
+    Decode is memory-bound: the roofline weight-byte term is exact
+    (K·N bytes int8 vs ceil(K/2)·N bytes packed = 2.00× less wire traffic,
+    4× vs bf16). Wall time here is interpret-mode (structural); the
+    bytes ratio is the production-relevant number and is reported per
+    shape."""
+    out = []
+    cfg = MacroConfig()
+    key = jax.random.PRNGKey(2)
+    for m, k, n in ((8, 1152, 512), (8, 2304, 2048), (32, 4320, 1024)):
+        x = jax.random.randint(key, (m, k), 0, 16).astype(jnp.float32)
+        w = jax.random.randint(jax.random.fold_in(key, k + n), (k, n), 0,
+                               16).astype(jnp.float32)
+        wp = pack_codes(w)
+        us_u = timeit(lambda a, b: cim_mvm_pallas(a, b, cfg), x, w)
+        us_p = timeit(lambda a, b: cim_mvm_pallas_packed(a, b, cfg), x, wp)
+        bytes_u = k * n                    # int8 container codes
+        bytes_p = wp.shape[0] * n          # two u4 codes per byte
+        out.append(row(
+            f"decode_packed_m{m}_k{k}_n{n}", us_p,
+            f"unpacked_us={us_u:.1f}|w_bytes {bytes_u}->{bytes_p} "
+            f"({bytes_u / bytes_p:.2f}x less HBM)"))
     return out
 
 

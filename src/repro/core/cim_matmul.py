@@ -8,32 +8,31 @@ Pipeline (per Eq. 1/7 and §III-D end-to-end flow):
   4. digital corrections      — Eq. 7 offset/zero-point terms (adder tree)
   5. dequantize               — × s_x s_w
 
-Backends:
-  "einsum" — materializes the [..., G, M] pre-ADC tensor (small layers, tests)
-  "scan"   — lax.scan over the G reduction groups: O(M) live memory, used for
-             large layers; numerically identical
-  "pallas" — fused TPU kernel (kernels/cim_mvm.py): groups iterated in VMEM,
-             ADC fused into the matmul epilogue — the TPU analogue of the
-             paper's "in-situ" capacitor reuse (never spill pre-ADC partials
-             to HBM)
+Steps 3–5 are owned by `core.engine.execute_mvm` — the single execution
+engine behind every entry point here. This module only quantizes operands
+and forwards; backend dispatch (einsum / scan / pallas / pallas_packed,
+`backend="auto"` selection) lives in the engine, see engine.py's
+backend-to-datapath table.
 
-Training uses `cim_matmul_ste`: forward value is the full analog pipeline,
-backward is the float matmul (the paper's STE QAT, §II-B — BP needs only this
-one quantization step, no bit-level GSTE).
+Training uses `cim_matmul_ste`: a `jax.custom_vjp` whose forward is the full
+analog pipeline and whose backward is the float matmul directly (the paper's
+STE QAT, §II-B — BP needs only this one quantization step, no bit-level
+GSTE). Serving uses `cim_matmul_prequant` against offline-quantized stored
+codes — int8 containers or nibble-packed uint8 (`engine.PackedCodes`).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Literal
 
 import jax
 import jax.numpy as jnp
 
-from .adc import adc_quantize
-from .macro import MacroConfig, Scheme, SimLevel
+from .engine import PackedCodes, execute_mvm
+from .macro import MacroConfig
 from .quant import (ActQuantConfig, WeightQuantConfig, act_scale,
                     quantize_act, quantize_weight, weight_scale)
-from .schemes import cim_mvm_codes, pad_and_group, signed_correction
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,54 +43,15 @@ class CIMConfig:
     macro: MacroConfig = dataclasses.field(default_factory=MacroConfig)
     act: ActQuantConfig = dataclasses.field(default_factory=ActQuantConfig)
     weight: WeightQuantConfig = dataclasses.field(default_factory=WeightQuantConfig)
-    backend: Literal["auto", "einsum", "scan", "pallas"] = "auto"
+    backend: Literal["auto", "einsum", "scan", "pallas", "pallas_packed"] = "auto"
 
-    def with_scheme(self, scheme: Scheme) -> "CIMConfig":
+    def with_scheme(self, scheme) -> "CIMConfig":
         return dataclasses.replace(
             self, macro=dataclasses.replace(self.macro, scheme=scheme))
 
 
 OFF = CIMConfig(enabled=False)
 BP_IDEAL = CIMConfig(enabled=True)
-
-
-def _choose_backend(cfg: CIMConfig, x: jax.Array, w: jax.Array) -> str:
-    if cfg.backend != "auto":
-        return cfg.backend
-    import math
-    k, m = w.shape[-2], w.shape[-1]
-    groups = -(-k // cfg.macro.n_rows)
-    rows = math.prod(x.shape[:-1]) if x.ndim > 1 else 1
-    # Materializing [rows, G, M] beyond ~64 MB → scan the groups instead.
-    return "scan" if rows * groups * m * 4 > (64 << 20) else "einsum"
-
-
-def _scan_grouped_mvm(x_codes: jax.Array, w_codes: jax.Array,
-                      cfg: MacroConfig, key, inl_seed: int) -> jax.Array:
-    """Group-sequential BP MVM: identical math to schemes.bp_mvm, O(M) memory.
-
-    WBS/BS large-layer paths reuse this per bit-plane via schemes' loops, so
-    only BP needs a dedicated scan (BP is the paper's deployed scheme).
-    """
-    assert cfg.scheme == Scheme.BP
-    xg, g = pad_and_group(x_codes, cfg.n_rows)          # [..., G, N]
-    wg, _ = pad_and_group(w_codes, cfg.n_rows, axis=0)  # [G, N, M]
-    xg = jnp.moveaxis(xg, -2, 0)                        # [G, ..., N]
-    keys = (jax.random.split(key, g) if key is not None
-            else jnp.zeros((g, 2), dtype=jnp.uint32))
-
-    def body(acc, operands):
-        xs, ws, ks = operands
-        v = jnp.einsum("...n,nm->...m", xs, ws,
-                       preferred_element_type=jnp.float32)
-        kk = ks if key is not None else None
-        q = adc_quantize(v, cfg, key=kk, inl_seed=inl_seed)
-        return acc + q, None
-
-    out_shape = x_codes.shape[:-1] + (w_codes.shape[-1],)
-    acc0 = jnp.zeros(out_shape, dtype=jnp.float32)
-    acc, _ = jax.lax.scan(body, acc0, (xg, wg, keys))
-    return acc
 
 
 def cim_matmul(x: jax.Array, w: jax.Array, cfg: CIMConfig, *,
@@ -102,28 +62,12 @@ def cim_matmul(x: jax.Array, w: jax.Array, cfg: CIMConfig, *,
     """
     if not cfg.enabled:
         return jnp.einsum("...k,km->...m", x, w)
-    if cfg.macro.sim_level == SimLevel.IDEAL:
-        key = None  # no stochastic terms at the ideal sim level
-
     s_x = act_scale(x, cfg.act)
     x_codes, zp = quantize_act(x, s_x, cfg.act)
     s_w = weight_scale(w, cfg.weight)
     w_codes = quantize_weight(w, s_w, cfg.weight)
-
-    backend = _choose_backend(cfg, x, w)
-    if backend == "pallas":
-        from repro.kernels.ops import cim_mvm_pallas
-        y_codes = cim_mvm_pallas(x_codes, w_codes, cfg.macro)
-    elif backend == "scan" and cfg.macro.scheme == Scheme.BP:
-        y_codes = _scan_grouped_mvm(x_codes, w_codes, cfg.macro, key, inl_seed)
-    else:
-        y_codes = cim_mvm_codes(x_codes, w_codes, cfg.macro, key=key,
-                                inl_seed=inl_seed)
-
-    y_int = signed_correction(y_codes, x_codes, w_codes,
-                              w_offset=cfg.weight.offset, x_zero_point=zp)
-    s_w_out = jnp.reshape(s_w, (-1,)) if cfg.weight.per_channel else s_w
-    return y_int * s_x * s_w_out
+    return execute_mvm(x_codes, w_codes, cfg, s_x=s_x, s_w=s_w,
+                       x_zero_point=zp, key=key, inl_seed=inl_seed)
 
 
 def cim_matmul_prequant(x: jax.Array, w_codes: jax.Array, w_scale: jax.Array,
@@ -131,30 +75,22 @@ def cim_matmul_prequant(x: jax.Array, w_codes: jax.Array, w_scale: jax.Array,
                         inl_seed: int = 0) -> jax.Array:
     """CIM matmul against OFFLINE-quantized weights (§Perf serving path).
 
-    w_codes are the stored unsigned 4-bit codes in an int8 container —
-    exactly what lives in the SRAM array. Halves weight HBM traffic vs
-    quantize-on-the-fly from bf16 (and is the honest deployment flow: a CIM
-    chip never sees float weights at inference).
+    w_codes are the stored unsigned 4-bit codes — either an int8 container
+    [K, M] (one code per byte) or the nibble-packed uint8 wire format
+    [ceil(K/2), M] produced by `models.quantize.quantize_params` /
+    `kernels.ops.pack_codes` (two codes per byte, the SRAM-density-faithful
+    layout). Packed halves weight HBM traffic again vs int8 (4× vs bf16) —
+    and is the honest deployment flow: a CIM chip never sees float weights
+    at inference.
     """
-    if cfg.macro.sim_level == SimLevel.IDEAL:
-        key = None
     s_x = act_scale(x, cfg.act)
     x_codes, zp = quantize_act(x, s_x, cfg.act)
-    w_f = w_codes.astype(jnp.float32)
-
-    backend = _choose_backend(cfg, x, w_f)
-    if backend == "pallas":
-        from repro.kernels.ops import cim_mvm_pallas
-        y_codes = cim_mvm_pallas(x_codes, w_f, cfg.macro)
-    elif backend == "scan" and cfg.macro.scheme == Scheme.BP:
-        y_codes = _scan_grouped_mvm(x_codes, w_f, cfg.macro, key, inl_seed)
+    if w_codes.dtype == jnp.uint8:  # nibble-packed wire format
+        weights = PackedCodes(w_codes, x.shape[-1])
     else:
-        y_codes = cim_mvm_codes(x_codes, w_f, cfg.macro, key=key,
-                                inl_seed=inl_seed)
-    y_int = signed_correction(y_codes, x_codes, w_f,
-                              w_offset=cfg.weight.offset, x_zero_point=zp)
-    s_w = jnp.reshape(w_scale, (-1,)) if cfg.weight.per_channel else w_scale
-    return y_int * s_x * s_w
+        weights = w_codes.astype(jnp.float32)
+    return execute_mvm(x_codes, weights, cfg, s_x=s_x, s_w=w_scale,
+                       x_zero_point=zp, key=key, inl_seed=inl_seed)
 
 
 def quantize_weight_offline(w: jax.Array, cfg: CIMConfig):
@@ -162,7 +98,8 @@ def quantize_weight_offline(w: jax.Array, cfg: CIMConfig):
 
     Scales are per-matrix: stacked-layer weights [L, ..., K, M] get one scale
     per leading index (broadcastable [L, ..., 1, 1]) so each layer's matrix
-    quantizes against its own range.
+    quantizes against its own range. Pack with `kernels.ops.pack_codes` for
+    the nibble-packed serving format.
     """
     wf = w.astype(jnp.float32)
     amax = jnp.max(jnp.abs(wf), axis=(-2, -1), keepdims=True)
@@ -171,16 +108,39 @@ def quantize_weight_offline(w: jax.Array, cfg: CIMConfig):
     return codes.astype(jnp.int8), s_w.astype(jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# STE (QAT) wrapper: analog forward, float-matmul backward
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _ste_matmul(x, w, cfg: CIMConfig, inl_seed: int, key):
+    return cim_matmul(x, w, cfg, key=key, inl_seed=inl_seed)
+
+
+def _ste_fwd(x, w, cfg, inl_seed, key):
+    return cim_matmul(x, w, cfg, key=key, inl_seed=inl_seed), (x, w)
+
+
+def _ste_bwd(cfg, inl_seed, res, g):
+    # Backward of the FLOAT matmul (Eq. 5's identity-derivative quantizers
+    # compose to exactly this): no second analog forward, no residual trick.
+    x, w = res
+    gx = jnp.einsum("...m,km->...k", g, w).astype(x.dtype)
+    gw = jnp.einsum("...k,...m->km", x, g).astype(w.dtype)
+    return gx, gw, None
+
+
+_ste_matmul.defvjp(_ste_fwd, _ste_bwd)
+
+
 def cim_matmul_ste(x: jax.Array, w: jax.Array, cfg: CIMConfig, *,
                    key: jax.Array | None = None, inl_seed: int = 0) -> jax.Array:
-    """CIM forward value with float-matmul gradients (STE residual trick).
+    """CIM forward value with float-matmul gradients (custom VJP).
 
-    y = x@w + sg(cim(x, w) − x@w): forward evaluates to the analog pipeline,
-    backward sees only d(x@w) — exactly the paper's BP QAT recipe (§II-B).
+    Forward evaluates the analog pipeline once; backward sees d(x@w)
+    directly — exactly the paper's BP QAT recipe (§II-B). Replaces the
+    former `y_float + sg(cim − y_float)` residual trick, which paid a
+    second (float) matmul and kept both outputs live under grad.
     """
     if not cfg.enabled:
         return jnp.einsum("...k,km->...m", x, w)
-    y_float = jnp.einsum("...k,km->...m", x, w)
-    y_cim = cim_matmul(jax.lax.stop_gradient(x), jax.lax.stop_gradient(w),
-                       cfg, key=key, inl_seed=inl_seed)
-    return y_float + jax.lax.stop_gradient(y_cim - y_float.astype(y_cim.dtype))
+    return _ste_matmul(x, w, cfg, inl_seed, key)

@@ -1,0 +1,319 @@
+"""Unified CIM execution engine: one backend registry for every datapath.
+
+The paper's central claim (§III-A) is that ONE set of in-array MOM
+capacitors serves every pipeline stage in situ — DAC charge loading, the
+analog MAC, the 8:4:2:1 shift-and-add, and TD-ADC sampling — instead of a
+per-stage datapath. This module is the software mirror of that claim: every
+layer-level matmul (`cim_matmul`, `cim_matmul_prequant`, `cim_matmul_ste`)
+funnels through a single `execute_mvm` entry point that owns backend
+selection, reduction padding, the grouped MVM, the Eq. 7 digital correction
+and dequantization. Backends only differ in how the DAC→MAC→ADC core is
+evaluated:
+
+  backend          paper datapath stage it models                 runs on
+  ---------------  ---------------------------------------------  ---------
+  "einsum"         whole [.., G, M] pre-ADC charge tensor at       any; small
+                   once: C-DAC drive + per-group MAC line, then    layers /
+                   one vectorized ADC transfer (supports the       tests; all
+                   stochastic NOISY/FULL converter models)         schemes
+  "scan"           group-sequential partial-sum accumulation       any; large
+                   (§II-A "accumulated across macros when          layers,
+                   K > N") with O(M) live memory                   BP scheme
+  "pallas"         fused TPU kernel: per-group MAC + ADC applied   TPU (or
+                   in VMEM registers, never spilling pre-ADC       interpret
+                   partials to HBM — the in-situ capacitor reuse   mode on
+                   made literal                                    CPU)
+  "pallas_packed"  same, with weights stored as nibble pairs       TPU (or
+                   (two u4 codes per byte) and unpacked in VMEM    interpret)
+                   — the TPU analogue of the paper's 559 Kb/mm²
+                   4-bit SRAM storage density
+
+The digital epilogue (Eq. 7 offset/zero-point correction, × s_x·s_w
+dequantization) is shared by all backends, exactly as the paper's adder
+tree + digital shift-and-add is shared by all schemes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+from .adc import adc_quantize
+from .macro import MacroConfig, Scheme, SimLevel
+from .schemes import cim_mvm_codes, pad_and_group, signed_correction
+
+
+# ---------------------------------------------------------------------------
+# weight containers
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PackedCodes:
+    """Nibble-packed stored weight codes: two u4 codes per uint8 byte.
+
+    data [..., ceil(K/2), M] uint8 (row 2i low nibble, 2i+1 high); `k` is
+    the logical reduction length before pack-padding. This is the at-rest /
+    HBM format — 4 bits per weight, like the SRAM array itself.
+    """
+
+    data: jax.Array
+    k: int
+
+    def tree_flatten(self):
+        return (self.data,), self.k
+
+    @classmethod
+    def tree_unflatten(cls, k, children):
+        return cls(children[0], k)
+
+    @property
+    def n_cols(self) -> int:
+        return self.data.shape[-1]
+
+
+def unpack(weights: PackedCodes) -> jax.Array:
+    """PackedCodes → dense f32 codes [..., K, M] (drops pack-padding)."""
+    from repro.kernels.ops import unpack_codes
+    return unpack_codes(weights.data, weights.k)
+
+
+# ---------------------------------------------------------------------------
+# backend protocol + registry
+# ---------------------------------------------------------------------------
+class CIMBackend(Protocol):
+    """Evaluates ŷ ≈ Σ_g ADC(Σ_{i∈g} X̃ W̃) in integer-MAC units.
+
+    x_codes [..., K] unsigned DAC codes; weights are dense codes [K, M]
+    (or PackedCodes for packed-capable backends). Returns float32 [..., M].
+    """
+
+    def __call__(self, x_codes: jax.Array, weights, cfg: MacroConfig, *,
+                 key: jax.Array | None, inl_seed: int) -> jax.Array: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    fn: Callable
+    schemes: frozenset          # schemes the backend implements
+    sim_levels: frozenset       # converter fidelities it can model
+    packed: bool = False        # consumes PackedCodes natively
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(name: str, *, schemes, sim_levels, packed: bool = False):
+    """Register a CIMBackend under `name` (decorator)."""
+    def deco(fn):
+        _REGISTRY[name] = BackendSpec(name, fn, frozenset(schemes),
+                                      frozenset(sim_levels), packed)
+        return fn
+    return deco
+
+
+def get_backend(name: str) -> BackendSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown CIM backend {name!r}; "
+                         f"registered: {sorted(_REGISTRY)}") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+_ALL_SCHEMES = (Scheme.BP, Scheme.WBS, Scheme.BS)
+_ALL_LEVELS = (SimLevel.IDEAL, SimLevel.NOISY, SimLevel.FULL)
+
+
+@register_backend("einsum", schemes=_ALL_SCHEMES, sim_levels=_ALL_LEVELS)
+def _einsum_backend(x_codes, w_codes, cfg: MacroConfig, *, key=None,
+                    inl_seed=0):
+    return cim_mvm_codes(x_codes, w_codes, cfg, key=key, inl_seed=inl_seed)
+
+
+@register_backend("scan", schemes=_ALL_SCHEMES, sim_levels=_ALL_LEVELS)
+def _scan_backend(x_codes, w_codes, cfg: MacroConfig, *, key=None,
+                  inl_seed=0):
+    """Group-sequential BP MVM: identical math to schemes.bp_mvm, O(M) live
+    memory. WBS/BS run their own per-bit-plane loops on the einsum path (BP
+    is the paper's deployed scheme), so non-BP requests fall through.
+    """
+    if cfg.scheme != Scheme.BP:
+        return _einsum_backend(x_codes, w_codes, cfg, key=key,
+                               inl_seed=inl_seed)
+    xg, g = pad_and_group(x_codes, cfg.n_rows)          # [..., G, N]
+    wg, _ = pad_and_group(w_codes, cfg.n_rows, axis=0)  # [G, N, M]
+    xg = jnp.moveaxis(xg, -2, 0)                        # [G, ..., N]
+    keys = (jax.random.split(key, g) if key is not None
+            else jnp.zeros((g, 2), dtype=jnp.uint32))
+
+    def body(acc, operands):
+        xs, ws, ks = operands
+        v = jnp.einsum("...n,nm->...m", xs, ws,
+                       preferred_element_type=jnp.float32)
+        kk = ks if key is not None else None
+        q = adc_quantize(v, cfg, key=kk, inl_seed=inl_seed)
+        return acc + q, None
+
+    out_shape = x_codes.shape[:-1] + (w_codes.shape[-1],)
+    acc0 = jnp.zeros(out_shape, dtype=jnp.float32)
+    acc, _ = jax.lax.scan(body, acc0, (xg, wg, keys))
+    return acc
+
+
+# pallas_call has no JVP/VJP rule, but `backend="auto"` must keep
+# cim_matmul differentiable (PTQ calibration / sensitivity sweeps grad
+# through the analog pipeline without the STE wrapper). Forward runs the
+# fused kernel; backward is the VJP of the numerically-identical einsum
+# pipeline (IDEAL transfer — same clip/round/LSB math).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _pallas_mvm(x_codes, w_codes, cfg: MacroConfig):
+    from repro.kernels.ops import cim_mvm_pallas
+    return cim_mvm_pallas(x_codes, w_codes, cfg)
+
+
+def _pallas_mvm_fwd(x_codes, w_codes, cfg):
+    return _pallas_mvm(x_codes, w_codes, cfg), (x_codes, w_codes)
+
+
+def _pallas_mvm_bwd(cfg, res, g):
+    x_codes, w_codes = res
+    _, vjp = jax.vjp(lambda x, w: _einsum_backend(x, w, cfg), x_codes,
+                     w_codes)
+    return vjp(g)
+
+
+_pallas_mvm.defvjp(_pallas_mvm_fwd, _pallas_mvm_bwd)
+
+
+@register_backend("pallas", schemes=(Scheme.BP,), sim_levels=(SimLevel.IDEAL,))
+def _pallas_backend(x_codes, w_codes, cfg: MacroConfig, *, key=None,
+                    inl_seed=0):
+    del key, inl_seed  # deterministic IDEAL transfer only
+    return _pallas_mvm(x_codes, w_codes, cfg)
+
+
+@register_backend("pallas_packed", schemes=(Scheme.BP,),
+                  sim_levels=(SimLevel.IDEAL,), packed=True)
+def _pallas_packed_backend(x_codes, weights: PackedCodes, cfg: MacroConfig, *,
+                           key=None, inl_seed=0):
+    del key, inl_seed
+    return _packed_mvm(x_codes, weights.data, weights.k, cfg)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _packed_mvm(x_codes, w_packed, k: int, cfg: MacroConfig):
+    from repro.kernels.ops import cim_mvm_pallas_packed
+    return cim_mvm_pallas_packed(x_codes, w_packed, cfg)
+
+
+def _packed_mvm_fwd(x_codes, w_packed, k, cfg):
+    return _packed_mvm(x_codes, w_packed, k, cfg), (x_codes, w_packed)
+
+
+def _packed_mvm_bwd(k, cfg, res, g):
+    # stored integer codes are not trainable; only the activation side
+    # carries a cotangent (input-saliency style uses)
+    x_codes, w_packed = res
+    from repro.kernels.ops import unpack_codes
+    w_codes = unpack_codes(w_packed, k)
+    _, vjp = jax.vjp(lambda x: _einsum_backend(x, w_codes, cfg), x_codes)
+    return vjp(g)[0], None
+
+
+_packed_mvm.defvjp(_packed_mvm_fwd, _packed_mvm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# backend selection
+# ---------------------------------------------------------------------------
+# Materializing the [rows, G, M] pre-ADC tensor beyond this switches the
+# jnp path from einsum to the group-sequential scan.
+_EINSUM_BYTES_CEILING = 64 << 20
+
+
+def choose_backend(cfg, x_codes: jax.Array, weights) -> str:
+    """Resolve cfg.backend ("auto" or explicit) to a registered backend name.
+
+    Auto policy (see also the scheme × sim-level matrix in ROADMAP.md):
+      * IDEAL + BP → the fused Pallas kernel — "pallas_packed" when the
+        weights are nibble-packed, else "pallas" (interpret mode executes
+        the same kernel body on CPU, keeping tests honest);
+      * stochastic sim levels or WBS/BS baselines → jnp backends, scanning
+        the reduction groups once the pre-ADC tensor would exceed ~64 MB.
+
+    `cfg` is the layer-level CIMConfig (duck-typed: .backend, .macro).
+    """
+    macro: MacroConfig = cfg.macro
+    packed = isinstance(weights, PackedCodes)
+    if cfg.backend != "auto":
+        return get_backend(cfg.backend).name
+    if macro.sim_level == SimLevel.IDEAL and macro.scheme == Scheme.BP:
+        return "pallas_packed" if packed else "pallas"
+    k = weights.k if packed else weights.shape[-2]
+    m = weights.n_cols if packed else weights.shape[-1]
+    groups = -(-k // macro.n_rows)
+    rows = math.prod(x_codes.shape[:-1]) if x_codes.ndim > 1 else 1
+    big = rows * groups * m * 4 > _EINSUM_BYTES_CEILING
+    return "scan" if (big and macro.scheme == Scheme.BP) else "einsum"
+
+
+# ---------------------------------------------------------------------------
+# the single entry point
+# ---------------------------------------------------------------------------
+def execute_mvm(x_codes: jax.Array, weights, cfg, *,
+                s_x: jax.Array, s_w: jax.Array, x_zero_point: jax.Array,
+                key: jax.Array | None = None, inl_seed: int = 0,
+                backend: str | None = None) -> jax.Array:
+    """Run one MVM through the full simulated datapath and dequantize.
+
+    x_codes [..., K] unsigned DAC codes; weights are dense stored codes
+    [K, M] (float32 / int8 container) or PackedCodes. `cfg` is the
+    layer-level CIMConfig (macro + quantizer configs). Owns: backend
+    selection, reduction padding (inside the backends — zero codes are
+    unselected SRAM rows), the grouped MVM, the Eq. 7 signed/affine
+    correction, and the × s_x·s_w dequantization. Returns float32 [..., M].
+    """
+    macro: MacroConfig = cfg.macro
+    if macro.sim_level == SimLevel.IDEAL:
+        key = None  # no stochastic terms at the ideal sim level
+    name = backend or choose_backend(cfg, x_codes, weights)
+    spec = get_backend(name)
+    if macro.scheme not in spec.schemes:
+        raise ValueError(f"backend {name!r} does not implement scheme "
+                         f"{macro.scheme}; use einsum/scan")
+    if macro.sim_level not in spec.sim_levels:
+        raise ValueError(f"backend {name!r} is deterministic; sim level "
+                         f"{macro.sim_level} needs a jnp backend")
+
+    packed = isinstance(weights, PackedCodes)
+    if packed and spec.packed:
+        y_codes = spec.fn(x_codes, weights, macro, key=key, inl_seed=inl_seed)
+        from repro.kernels.ops import packed_col_sums
+        sum_w = packed_col_sums(weights.data)
+        k = weights.k
+    else:
+        w_codes = unpack(weights) if packed else weights.astype(jnp.float32)
+        if not packed and spec.packed:
+            from repro.kernels.ops import pack_codes
+            y_codes = spec.fn(x_codes, PackedCodes(pack_codes(w_codes),
+                                                   w_codes.shape[-2]),
+                              macro, key=key, inl_seed=inl_seed)
+        else:
+            y_codes = spec.fn(x_codes, w_codes, macro, key=key,
+                              inl_seed=inl_seed)
+        sum_w = jnp.sum(w_codes, axis=-2)
+        k = w_codes.shape[-2]
+
+    y_int = signed_correction(y_codes, x_codes, None,
+                              w_offset=cfg.weight.offset,
+                              x_zero_point=x_zero_point, sum_w=sum_w, k=k)
+    s_w_out = jnp.reshape(s_w, (-1,)) if cfg.weight.per_channel else s_w
+    return y_int * s_x * s_w_out

@@ -121,17 +121,24 @@ def exact_mvm_codes(x_codes: jax.Array, w_codes: jax.Array) -> jax.Array:
 
 
 def signed_correction(y_codes: jax.Array, x_codes: jax.Array,
-                      w_codes: jax.Array, *, w_offset: int,
-                      x_zero_point: jax.Array) -> jax.Array:
+                      w_codes: jax.Array | None = None, *, w_offset: int,
+                      x_zero_point: jax.Array,
+                      sum_w: jax.Array | None = None,
+                      k: int | None = None) -> jax.Array:
     """Digital correction generalizing Eq. 7 to affine activations.
 
     With X = s_x (X̃ − z) and W = s_w (W̃ − o):
       Σ X W / (s_x s_w) = Σ X̃ W̃ − o Σ X̃ − z Σ W̃ + o z K
     The Σ X̃ term is the paper's shared adder tree; Σ W̃ is precomputable at
-    weight-load time. All exact integer arithmetic — no analog error.
+    weight-load time — pass it as `sum_w` (with the logical reduction
+    length `k`) when the stored codes are not materialized, e.g. the
+    engine's nibble-packed weight path. All exact integer arithmetic — no
+    analog error.
     """
-    k = x_codes.shape[-1]
+    if sum_w is None:
+        sum_w = jnp.sum(w_codes, axis=-2)                   # [..., M]
+    if k is None:
+        k = x_codes.shape[-1]
     sum_x = jnp.sum(x_codes, axis=-1, keepdims=True)       # [..., 1]
-    sum_w = jnp.sum(w_codes, axis=0)                        # [M]
     return (y_codes - w_offset * sum_x - x_zero_point * sum_w
             + w_offset * x_zero_point * k)

@@ -35,6 +35,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams → CompilerParams across 0.4.x/0.5.x; support
+# both so the kernels import under whichever toolchain is baked in.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _cim_mvm_kernel(x_ref, w_ref, o_ref, *, inv_lsb: float, lsb: float,
                     levels: int, n_groups: int):
@@ -105,7 +110,7 @@ def cim_mvm_grouped_packed(x_codes: jax.Array, w_packed: jax.Array, *,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_codes.astype(jnp.float32), w_packed.astype(jnp.uint8))
@@ -144,7 +149,7 @@ def cim_mvm_grouped(x_codes: jax.Array, w_codes: jax.Array, *, n_rows: int,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_codes.astype(jnp.float32), w_codes.astype(jnp.float32))

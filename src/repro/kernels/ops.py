@@ -18,32 +18,68 @@ from .cim_mvm import cim_mvm_grouped, cim_mvm_grouped_packed
 
 
 def pack_codes(w_codes: jax.Array) -> jax.Array:
-    """[K, N] 4-bit codes → [K/2, N] uint8 (row 2i low nibble, 2i+1 high).
+    """[..., K, N] 4-bit codes → [..., ceil(K/2), N] uint8 nibble pairs.
 
-    K must be even (pad first). This is the wire/HBM format the packed
-    kernel consumes — 4 bits per stored weight, as in the SRAM array.
+    Row 2i lands in the low nibble, row 2i+1 in the high nibble. Odd K is
+    zero-padded first (a zero code is an unselected SRAM row — an exact
+    no-op in the MVM and in the Eq. 7 correction sums). This is the
+    wire/HBM format the packed kernel consumes — 4 bits per stored weight,
+    as in the SRAM array. Leading dims (stacked layers, experts) pass
+    through untouched.
     """
-    k, n = w_codes.shape
-    assert k % 2 == 0, "pad K to even before packing"
-    wi = w_codes.astype(jnp.int32).reshape(k // 2, 2, n)
-    return (wi[:, 0] | (wi[:, 1] << 4)).astype(jnp.uint8)
+    k, n = w_codes.shape[-2:]
+    if k % 2:
+        widths = [(0, 0)] * (w_codes.ndim - 2) + [(0, 1), (0, 0)]
+        w_codes = jnp.pad(w_codes, widths)
+        k += 1
+    wi = w_codes.astype(jnp.int32).reshape(*w_codes.shape[:-2], k // 2, 2, n)
+    return (wi[..., 0, :] | (wi[..., 1, :] << 4)).astype(jnp.uint8)
+
+
+def unpack_codes(w_packed: jax.Array, k: int | None = None) -> jax.Array:
+    """Inverse of pack_codes: [..., K2, N] uint8 → [..., K, N] f32 codes.
+
+    `k` trims the pack-padding row when the logical K was odd; defaults to
+    the full 2·K2 rows.
+    """
+    wi = w_packed.astype(jnp.int32)
+    lo = (wi & 15).astype(jnp.float32)
+    hi = ((wi >> 4) & 15).astype(jnp.float32)
+    k2, n = w_packed.shape[-2:]
+    full = jnp.stack([lo, hi], axis=-2).reshape(*w_packed.shape[:-2],
+                                                2 * k2, n)
+    return full if k is None else full[..., :k, :]
+
+
+def packed_col_sums(w_packed: jax.Array) -> jax.Array:
+    """Σ_K W̃ per output column straight from the packed bytes — the Eq. 7
+    ΣW̃ correction term without materializing unpacked codes (pack-padding
+    rows hold zero codes, so they are exact no-ops in the sum)."""
+    wi = w_packed.astype(jnp.int32)
+    return jnp.sum((wi & 15) + ((wi >> 4) & 15), axis=-2).astype(jnp.float32)
 
 
 def cim_mvm_pallas_packed(x_codes: jax.Array, w_packed: jax.Array,
                           cfg: MacroConfig, *, bm: int = 128, bn: int = 128,
                           interpret: bool | None = None) -> jax.Array:
-    """ŷ ≈ Σ X̃ W̃ with 4-bit-packed weights. x [..., K], w_packed [K/2, M]."""
+    """ŷ ≈ Σ X̃ W̃ with 4-bit-packed weights. x [..., K], w_packed [K2, M]
+    with K ≤ 2·K2 (K2 = ceil(K/2) nibble pairs). K, M and the leading dims
+    are padded here; zero bytes are pairs of unselected SRAM rows."""
     assert cfg.scheme == Scheme.BP
+    assert cfg.n_rows % 2 == 0, "nibble packing needs an even macro depth"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     lead = x_codes.shape[:-1]
     k = x_codes.shape[-1]
-    assert k == 2 * w_packed.shape[0] and k % cfg.n_rows == 0, \
-        "caller pads K to the macro depth before packing"
+    k2 = w_packed.shape[0]
+    assert k in (2 * k2, 2 * k2 - 1), (x_codes.shape, w_packed.shape)
     x2 = x_codes.reshape(-1, k)
     m, n = x2.shape[0], w_packed.shape[1]
+    # pad x to the byte rows, then both operands to the macro depth
+    x2 = _pad_to(_pad_to(x2, 2, 1), cfg.n_rows, 1)
+    w2 = _pad_to(w_packed, cfg.n_rows // 2, 0)
     x2 = _pad_to(x2, min(bm, max(m, 1)), 0)
-    w2 = _pad_to(w_packed, min(bn, max(n, 1)), 1)
+    w2 = _pad_to(w2, min(bn, max(n, 1)), 1)
     bm_eff = bm if x2.shape[0] % bm == 0 else x2.shape[0]
     bn_eff = bn if w2.shape[1] % bn == 0 else w2.shape[1]
     out = cim_mvm_grouped_packed(

@@ -200,12 +200,20 @@ def _layer_knobs(cfg):
     raise ValueError(cfg.family)
 
 
+def _cost_dict(cost) -> dict:
+    """compiled.cost_analysis() → dict across jax versions (older releases
+    return a one-dict-per-device list)."""
+    if isinstance(cost, (list, tuple)):
+        return cost[0] if cost else {}
+    return cost
+
+
 def _measure_costs(arch, shape_name, mesh, *, cim, cfg_variant):
     fn, args, _, _ = build_cell(arch, shape_name, mesh, cim=cim,
                                 unroll=True, cfg_override=cfg_variant)
     with mesh:
         compiled = fn.lower(*args).compile()
-        cost = compiled.cost_analysis()
+        cost = _cost_dict(compiled.cost_analysis())
         coll = collective_bytes(compiled.as_text())
     out = {"flops": float(cost.get("flops", 0.0)),
            "bytes": float(cost.get("bytes accessed", 0.0)),
@@ -273,6 +281,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         ("__xp" if analysis == "extrapolate" else "")
     result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                     "cim": cim, "cell": cell_id}
+    if runnable and cim == "bp-prequant" and shape.kind == "train":
+        runnable, why = False, \
+            "bp-prequant is a serving flow (stored codes are not trainable)"
     if not runnable:
         result["status"] = "skipped"
         result["reason"] = why
@@ -292,7 +303,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             compiled = lowered.compile()
             t_compile = time.monotonic() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = _cost_dict(compiled.cost_analysis())
             try:
                 hlo = compiled.as_text()
             except Exception:
@@ -374,7 +385,11 @@ def main():
     ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
     ap.add_argument("--mesh", choices=("single", "multi", "both"),
                     default="single")
-    ap.add_argument("--cim", choices=("off", "bp"), default="off")
+    ap.add_argument("--cim", choices=("off", "bp", "bp-prequant"),
+                    default="off",
+                    help="bp = quantize-on-the-fly BP CIM; bp-prequant = "
+                         "serving flow with offline nibble-packed u4 stored "
+                         "codes (1/4 the bf16 weight bytes)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--analysis", choices=("scan", "extrapolate"),
                     default="scan",

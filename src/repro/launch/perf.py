@@ -79,8 +79,9 @@ VARIANTS = {
            "paper-faithful BP CIM decode (quantize-on-the-fly from bf16): "
            "adds quant ops; memory term ≈ baseline (still reads bf16 W)"),
     "C2": ("llama3-8b", "decode_32k", "bp-prequant", None,
-           "offline-quantized stored codes (int8 container of u4): weight "
-           "bytes /2 vs bf16; predict memory term −~40 %"),
+           "offline-quantized stored codes, nibble-packed uint8 (two u4 "
+           "per byte, the SRAM-density format): weight bytes /4 vs bf16; "
+           "predict memory term −~60 %"),
 }
 
 

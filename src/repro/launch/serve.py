@@ -25,15 +25,17 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--cim", choices=("off", "bp"), default="off")
+    ap.add_argument("--cim", choices=("off", "bp", "bp-prequant"),
+                    default="off")
     args = ap.parse_args()
 
     cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
-    if args.cim == "bp":
+    if args.cim != "off":
         cfg = cfg.replace(cim=CIMConfig(enabled=True))
     params = registry.init_params(jax.random.PRNGKey(0), cfg,
                                   max_seq=args.max_len)
-    server = Server(params, cfg, n_slots=args.slots, max_len=args.max_len)
+    server = Server(params, cfg, n_slots=args.slots, max_len=args.max_len,
+                    prequant=args.cim == "bp-prequant")
 
     rng = np.random.RandomState(0)
     reqs = []

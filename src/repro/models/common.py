@@ -92,7 +92,9 @@ def dense(p: Params, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
     model compute dtype. Output is cast back to the compute dtype.
     """
     if cfg.cim.enabled and (w + "_q") in p:
-        # serving path: offline-quantized stored codes (half the HBM bytes)
+        # serving path: offline-quantized stored codes — int8 containers or
+        # nibble-packed uint8 (1/4 the bf16 HBM bytes); the execution
+        # engine (core.engine) dispatches either format to its backend
         from repro.core.cim_matmul import cim_matmul_prequant
         y = cim_matmul_prequant(x.astype(jnp.float32), p[w + "_q"],
                                 p[w + "_scale"], cfg.cim)
@@ -149,7 +151,7 @@ def dense_rs(p: Params, x: jax.Array, cfg: ModelConfig, *, w: str,
                                     tiled=True)
 
     w_spec = P("model", "data" if fsdp else None)
-    y = jax.shard_map(
+    y = _sh.shard_map(
         fn, mesh=mesh,
         in_specs=(P(batch_axes, None, "model"), w_spec),
         out_specs=P(batch_axes, "model", None),

@@ -42,20 +42,29 @@ def init(key, cfg: ModelConfig) -> dict:
                      / math.sqrt(d))}
 
 
-def _mm(x, w, cfg: ModelConfig, train: bool):
+def _mm(p, name: str, x, cfg: ModelConfig, train: bool):
+    """Gate/head matmul, CIM-switchable like common.dense: float weights in
+    training/eval, offline-quantized stored codes (`<name>_q`, int8 or
+    nibble-packed uint8) when the params were run through
+    models.quantize.quantize_params — the deployed on-chip-residence flow
+    (§V-C: the whole GRU fits in 64 macros' SRAM)."""
+    if cfg.cim.enabled and name + "_q" in p:
+        from repro.core.cim_matmul import cim_matmul_prequant
+        return cim_matmul_prequant(x, p[name + "_q"], p[name + "_scale"],
+                                   cfg.cim)
     if cfg.cim.enabled:
         fn = cim_matmul_ste if train else cim_matmul
-        return fn(x, w, cfg.cim)
-    return x @ w
+        return fn(x, p[name], cfg.cim)
+    return x @ p[name]
 
 
 def gru_cell(p, x_t, h, cfg: ModelConfig, *, train: bool):
     """One GRU step. x_t, h: [B, 144]."""
     xh = jnp.concatenate([x_t, h], axis=-1)              # [B, 288] = 2 groups
-    z = jax.nn.sigmoid(_mm(xh, p["w_z"], cfg, train) + p["b_z"])
-    r = jax.nn.sigmoid(_mm(xh, p["w_r"], cfg, train) + p["b_r"])
+    z = jax.nn.sigmoid(_mm(p, "w_z", xh, cfg, train) + p["b_z"])
+    r = jax.nn.sigmoid(_mm(p, "w_r", xh, cfg, train) + p["b_r"])
     xrh = jnp.concatenate([x_t, r * h], axis=-1)
-    h_tilde = jnp.tanh(_mm(xrh, p["w_h"], cfg, train) + p["b_h"])
+    h_tilde = jnp.tanh(_mm(p, "w_h", xrh, cfg, train) + p["b_h"])
     return (1 - z) * h + z * h_tilde
 
 
@@ -68,7 +77,7 @@ def forward(p, frames: jax.Array, cfg: ModelConfig, *, train: bool = False):
         return gru_cell(p, x_t, h, cfg, train=train), None
 
     h, _ = jax.lax.scan(step, h0, jnp.moveaxis(frames, 1, 0))
-    return _mm(h, p["head"], cfg, train)
+    return _mm(p, "head", h, cfg, train)
 
 
 def train_loss(p, batch, cfg: ModelConfig, rng=None):

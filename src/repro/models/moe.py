@@ -87,17 +87,57 @@ def _positions_in_expert(ids_flat: jax.Array, e_pad: int):
     return jnp.take_along_axis(pos, ids_flat[:, None], axis=1)[:, 0]
 
 
+def _expert_weights(p: dict, name: str, cfg: ModelConfig) -> dict:
+    """One routed-expert weight as a small dict: {"w": float [E, K, M]} or,
+    after models.quantize.quantize_params, {"q": stored codes (int8 or
+    nibble-packed uint8), "s": per-expert scales [E, 1, 1]} — the serving
+    format the execution engine consumes directly. Stored codes are only
+    meaningful on the macro, so (like common.dense and gru._mm) they are
+    picked up only when cfg.cim.enabled."""
+    if cfg.cim.enabled and name + "_q" in p:
+        return {"q": p[name + "_q"], "s": p[name + "_scale"]}
+    return {"w": p[name]}
+
+
+def _expert_specs(wp: dict, w_spec) -> dict:
+    """shard_map in_specs matching an _expert_weights dict. Stored codes
+    shard exactly like the float weight they replace (nibble packing halves
+    the K dim but never splits a byte); per-expert scales ride the expert
+    axis only."""
+    if "q" in wp:
+        return {"q": w_spec, "s": P("model", None, None)}
+    return {"w": w_spec}
+
+
+def _gather_expert(wp: dict, axis: int) -> dict:
+    """FSDP all-gather of an expert weight's sharded K/M dim (ZeRO-3)."""
+    key = "q" if "q" in wp else "w"
+    return {**wp, key: jax.lax.all_gather(wp[key], "data", axis=axis,
+                                          tiled=True)}
+
+
 def _expert_ffn(buf: jax.Array, wg, wu, wd, cfg: ModelConfig, train: bool):
-    """Batched expert MLP: buf [E, C, D] → [E, C, D] (CIM-aware)."""
+    """Batched expert MLP: buf [E, C, D] → [E, C, D] (CIM-aware).
+
+    wg/wu/wd are _expert_weights dicts; the CIM path vmaps the engine's
+    layer entry point over the expert axis (prequant stored codes or
+    quantize-on-the-fly float weights)."""
     if cfg.cim.enabled:
-        mm = cim_matmul_ste if train else cim_matmul
-        f = jax.vmap(lambda xb, w: mm(xb.astype(jnp.float32),
-                                      w.astype(jnp.float32), cfg.cim))
+        def one(xb, wp):
+            if "q" in wp:
+                from repro.core.cim_matmul import cim_matmul_prequant
+                return cim_matmul_prequant(xb.astype(jnp.float32), wp["q"],
+                                           wp["s"], cfg.cim)
+            mm = cim_matmul_ste if train else cim_matmul
+            return mm(xb.astype(jnp.float32), wp["w"].astype(jnp.float32),
+                      cfg.cim)
+
+        f = jax.vmap(one)
         h = jax.nn.silu(f(buf, wg)) * f(buf, wu)
         return f(h, wd).astype(buf.dtype)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) \
-        * jnp.einsum("ecd,edf->ecf", buf, wu)
-    return jnp.einsum("ecf,efd->ecd", h, wd)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg["w"])) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu["w"])
+    return jnp.einsum("ecf,efd->ecd", h, wd["w"])
 
 
 def _local_moe(x2, router_w, wg, wu, wd, cfg: ModelConfig, *, train: bool,
@@ -109,7 +149,7 @@ def _local_moe(x2, router_w, wg, wu, wd, cfg: ModelConfig, *, train: bool,
     Returns (y2 [T, D], aux_loss).
     """
     t, d = x2.shape
-    e_local = wg.shape[0]
+    e_local = next(iter(wg.values())).shape[0]
     e_pad = padded_experts(cfg.moe.n_experts)
     k = cfg.moe.top_k
 
@@ -153,13 +193,16 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
     b, t, d = x.shape
     mesh = sharding.get_mesh()
     y_shared = _shared_expert(p, x, cfg, train) if cfg.moe.n_shared else 0.0
+    wg = _expert_weights(p, "e_gate", cfg)
+    wu = _expert_weights(p, "e_up", cfg)
+    wd = _expert_weights(p, "e_down", cfg)
 
     if mesh is None or "model" not in mesh.axis_names \
             or padded_experts(cfg.moe.n_experts) % mesh.shape["model"] != 0:
         x2 = x.reshape(b * t, d)
         cap = _capacity(b * t, cfg)
-        y2, aux = _local_moe(x2, p["router"], p["e_gate"], p["e_up"],
-                             p["e_down"], cfg, train=train, capacity=cap)
+        y2, aux = _local_moe(x2, p["router"], wg, wu, wd,
+                             cfg, train=train, capacity=cap)
         return y_shared + y2.reshape(b, t, d).astype(x.dtype), aux
 
     # --- expert-parallel shard_map --------------------------------------
@@ -174,18 +217,18 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
     fsdp = sharding.resolve("fsdp") is not None \
         and "data" in mesh.axis_names and mesh.shape["data"] > 1
 
-    def shard_fn(x_l, router_w, wg, wu, wd):
+    def shard_fn(x_l, router_w, wg_l, wu_l, wd_l):
         rank = jax.lax.axis_index("model")
-        e_local = wg.shape[0]
+        e_local = next(iter(wg_l.values())).shape[0]
         # FSDP all-gather of the local experts' D-shards (ZeRO-3 on use).
         if fsdp:
-            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
-            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
-            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+            wg_l = _gather_expert(wg_l, 1)
+            wu_l = _gather_expert(wu_l, 1)
+            wd_l = _gather_expert(wd_l, 2)
         bl, tl, dl = x_l.shape
-        y2, aux = _local_moe(x_l.reshape(bl * tl, dl), router_w, wg, wu, wd,
-                             cfg, train=train, capacity=cap,
-                             e_offset=rank * e_local)
+        y2, aux = _local_moe(x_l.reshape(bl * tl, dl), router_w,
+                             wg_l, wu_l, wd_l, cfg, train=train,
+                             capacity=cap, e_offset=rank * e_local)
         y2 = jax.lax.psum(y2, "model")
         # aux must be replicated across every mesh axis for the P() out_spec
         aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
@@ -193,13 +236,15 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
 
     x_spec = P(batch_axes if batch_axes else None, None, None)
     dax = "data" if fsdp else None
-    out = jax.shard_map(
+    out = sharding.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(x_spec, P(None, None), P("model", dax, None),
-                  P("model", dax, None), P("model", None, dax)),
+        in_specs=(x_spec, P(None, None),
+                  _expert_specs(wg, P("model", dax, None)),
+                  _expert_specs(wu, P("model", dax, None)),
+                  _expert_specs(wd, P("model", None, dax))),
         out_specs=(x_spec, P()),
         check_vma=False,
-    )(x, p["router"], p["e_gate"], p["e_up"], p["e_down"])
+    )(x, p["router"], wg, wu, wd)
     y2, aux = out
     return y_shared + y2.astype(x.dtype), aux
 
@@ -228,9 +273,9 @@ def _a2a_moe(p: dict, x: jax.Array, cfg: ModelConfig, mesh, batch_axes,
 
     def shard_fn(x_l, router_w, wg, wu, wd):
         if fsdp:
-            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
-            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
-            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+            wg = _gather_expert(wg, 1)
+            wu = _gather_expert(wu, 1)
+            wd = _gather_expert(wd, 2)
         bl, tl, dl = x_l.shape
         x2 = x_l.reshape(bl * tl, dl)
         tloc = x2.shape[0]
@@ -267,13 +312,18 @@ def _a2a_moe(p: dict, x: jax.Array, cfg: ModelConfig, mesh, batch_axes,
 
     dax = "data" if fsdp else None
     x_spec = P(batch_axes if batch_axes else None, "model", None)
-    y2, aux = jax.shard_map(
+    wg = _expert_weights(p, "e_gate", cfg)
+    wu = _expert_weights(p, "e_up", cfg)
+    wd = _expert_weights(p, "e_down", cfg)
+    y2, aux = sharding.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(x_spec, P(None, None), P("model", dax, None),
-                  P("model", dax, None), P("model", None, dax)),
+        in_specs=(x_spec, P(None, None),
+                  _expert_specs(wg, P("model", dax, None)),
+                  _expert_specs(wu, P("model", dax, None)),
+                  _expert_specs(wd, P("model", None, dax))),
         out_specs=(x_spec, P()),
         check_vma=False,
-    )(x, p["router"], p["e_gate"], p["e_up"], p["e_down"])
+    )(x, p["router"], wg, wu, wd)
     return y2, aux
 
 

@@ -1,10 +1,19 @@
 """Offline weight quantization for serving: bf16 params → stored 4-bit codes
-(int8 containers) + scales, per Eq. 7's W̃ encoding.
++ scales, per Eq. 7's W̃ encoding.
 
 This is the deployment flow of a CIM system (weights are programmed into the
-SRAM once) and a §Perf memory-term optimization on TPU: decode reads half
-the weight bytes. Embeddings stay float (a lookup, not an MVP on the macro);
-norms/biases stay float.
+SRAM once) and a §Perf memory-term optimization on TPU. Two container
+formats, consumed transparently by `core.engine` via `cim_matmul_prequant`:
+
+  packed=True (default) — nibble-packed uint8 [..., ceil(K/2), M]: two u4
+      codes per byte, the wire/HBM format matching the macro's 4-bit SRAM
+      storage density (559 Kb/mm²). Decode reads 1/4 the weight bytes of
+      bf16.
+  packed=False — int8 [..., K, M], one code per byte (half the bf16 bytes);
+      kept for A/B benchmarking of the packing win.
+
+Embeddings stay float (a lookup, not an MVM on the macro); norms/biases
+stay float.
 """
 from __future__ import annotations
 
@@ -18,22 +27,30 @@ QUANTIZABLE = {
     "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "head",
     "w_dq", "w_uq", "w_dkv", "w_uk", "w_uv", "w_kr", "w_proj",
     "w_in", "w_out", "w_x", "w_r", "w_k", "w_v", "w_g",
+    "w_z", "w_h",                       # KWS GRU gates
+    "e_gate", "e_up", "e_down",         # routed MoE experts [E, K, M]
 }
 
 
-def quantize_params(params: dict, cfg: ModelConfig) -> dict:
-    """Replace quantizable float leaves `w` with `w_q` (int8) + `w_scale`.
+def quantize_params(params: dict, cfg: ModelConfig, *,
+                    packed: bool = True) -> dict:
+    """Replace quantizable float leaves `w` with `w_q` (+ `w_scale`).
 
-    Works on concrete arrays and (via jax.eval_shape at the caller) on
-    abstract trees for the dry-run.
+    `w_q` is nibble-packed uint8 when `packed` (the default serving format)
+    or an int8 code-per-byte container otherwise. Works on concrete arrays
+    and (via jax.eval_shape at the caller) on abstract trees for the
+    dry-run.
     """
     if isinstance(params, dict):
         out = {}
         for k, v in params.items():
             if isinstance(v, dict):
-                out[k] = quantize_params(v, cfg)
+                out[k] = quantize_params(v, cfg, packed=packed)
             elif k in QUANTIZABLE and getattr(v, "ndim", 0) >= 2:
                 codes, scale = quantize_weight_offline(v, cfg.cim)
+                if packed:
+                    from repro.kernels.ops import pack_codes
+                    codes = pack_codes(codes)
                 out[k + "_q"] = codes
                 out[k + "_scale"] = scale
             else:
@@ -42,5 +59,7 @@ def quantize_params(params: dict, cfg: ModelConfig) -> dict:
     return params
 
 
-def abstract_quantized_params(params_abs, cfg: ModelConfig):
-    return jax.eval_shape(lambda p: quantize_params(p, cfg), params_abs)
+def abstract_quantized_params(params_abs, cfg: ModelConfig, *,
+                              packed: bool = True):
+    return jax.eval_shape(
+        lambda p: quantize_params(p, cfg, packed=packed), params_abs)

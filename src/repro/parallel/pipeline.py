@@ -65,7 +65,8 @@ def pipeline_apply(stage_fn, stage_params, x_micro, *, mesh,
                          for i in range(n_stages)])
         return outs
 
-    return jax.shard_map(
+    from repro.parallel.sharding import shard_map
+    return shard_map(
         per_stage, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_params,
                                is_leaf=lambda x: hasattr(x, "shape")), P()),

@@ -34,6 +34,22 @@ _MESH: Optional[Mesh] = None
 _FSDP: bool = True
 
 
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """jax.shard_map across jax versions.
+
+    Newer jax exposes it at the top level with a `check_vma` flag; 0.4.x
+    has jax.experimental.shard_map.shard_map with the same semantics under
+    `check_rep`. All repo call sites go through this wrapper.
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
 def set_mesh(mesh: Optional[Mesh]) -> None:
     global _MESH
     _MESH = mesh

@@ -33,15 +33,16 @@ def test_error_feedback_is_unbiased_over_time():
 
 def test_compressed_psum_single_device_mesh():
     """Semantics check on a trivial mesh: mean-psum of one participant."""
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("data",))
     x = jnp.linspace(-1, 1, 64)
     err0 = jnp.zeros_like(x)
 
     def f(x, e):
         return compressed_psum(x, "data", e)
 
-    y, err = jax.jit(jax.shard_map(
+    from repro.parallel.sharding import shard_map
+    y, err = jax.jit(shard_map(
         f, mesh=mesh, in_specs=(jax.sharding.PartitionSpec(),) * 2,
         out_specs=(jax.sharding.PartitionSpec(),) * 2))(x, err0)
     np.testing.assert_allclose(np.asarray(y + err), np.asarray(x), atol=1e-6)

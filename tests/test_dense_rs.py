@@ -25,8 +25,8 @@ batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
                                       cfg0.vocab),
          "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
                                       cfg0.vocab)}
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 2)
 sharding.set_mesh(mesh)
 with mesh:
     l0 = jax.jit(lambda p, b: mod.train_loss(p, b, cfg0, None))(params, batch)

@@ -11,18 +11,20 @@ import pytest
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def _run_cell(arch, shape, mesh, tmp):
+def _run_cell(arch, shape, mesh, tmp, cim="off"):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)
     cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
-           "--shape", shape, "--mesh", mesh, "--out", str(tmp)]
+           "--shape", shape, "--mesh", mesh, "--out", str(tmp),
+           "--cim", cim]
     proc = subprocess.run(cmd, capture_output=True, text=True, env=env,
                           timeout=1500)
     assert proc.returncode == 0, proc.stderr[-2000:]
     mesh_name = {"single": "pod16x16", "multi": "pod2x16x16"}[mesh]
-    path = os.path.join(tmp, f"{arch}__{shape}__{mesh_name}.json")
-    with open(path) as f:
+    cell = f"{arch}__{shape}__{mesh_name}" + \
+        (f"__cim-{cim}" if cim != "off" else "")
+    with open(os.path.join(tmp, cell + ".json")) as f:
         return json.load(f)
 
 
@@ -52,3 +54,13 @@ def test_long_context_skip_policy(tmp_path):
     r = _run_cell("llama3-8b", "long_500k", "single", tmp_path)
     assert r["status"] == "skipped"
     assert "full-softmax-attention" in r["reason"]
+
+
+@pytest.mark.slow
+def test_prequant_packed_serving_cell(tmp_path):
+    """The nibble-packed-u4 serving flow (ISSUE 1) must lower+compile on the
+    production mesh — decode against offline-quantized stored codes."""
+    r = _run_cell("internlm2-1.8b", "decode_32k", "single", tmp_path,
+                  cim="bp-prequant")
+    assert r["status"] == "ok", r.get("error")
+    assert r["roofline"]["chips"] == 256

@@ -1,0 +1,286 @@
+"""Unified execution engine: backend registry, auto-selection, custom-VJP
+STE, and the nibble-packed serving path (ISSUE 1 acceptance tests)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (CIMConfig, PROTOTYPE, PackedCodes, Scheme, SimLevel,
+                        available_backends, choose_backend, cim_matmul,
+                        cim_matmul_prequant, cim_matmul_ste, execute_mvm,
+                        get_backend)
+from repro.core.cim_matmul import quantize_weight_offline
+from repro.core.quant import act_scale, quantize_act
+from repro.kernels.ops import pack_codes, packed_col_sums, unpack_codes
+
+
+def _xw(key, m=8, k=300, n=10):
+    x = jax.nn.relu(jax.random.normal(key, (m, k)))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+    return x, w
+
+
+# ---------------------------------------------------------------------------
+# registry + selection
+# ---------------------------------------------------------------------------
+def test_registry_has_all_backends():
+    assert available_backends() == ("einsum", "pallas", "pallas_packed",
+                                    "scan")
+    with pytest.raises(ValueError, match="unknown CIM backend"):
+        get_backend("does-not-exist")
+
+
+def test_auto_selects_pallas_at_ideal_bp():
+    """Acceptance: backend='auto' picks the fused kernel at IDEAL/BP."""
+    x, w = _xw(jax.random.PRNGKey(0))
+    assert choose_backend(CIMConfig(enabled=True), x, w) == "pallas"
+    packed = PackedCodes(pack_codes(jnp.zeros((300, 10))), 300)
+    assert choose_backend(CIMConfig(enabled=True), x, packed) == "pallas_packed"
+
+
+@pytest.mark.parametrize("level,scheme,expect", [
+    (SimLevel.NOISY, Scheme.BP, "einsum"),
+    (SimLevel.FULL, Scheme.BP, "einsum"),
+    (SimLevel.IDEAL, Scheme.WBS, "einsum"),
+    (SimLevel.IDEAL, Scheme.BS, "einsum"),
+])
+def test_auto_falls_back_to_jnp_backends(level, scheme, expect):
+    x, w = _xw(jax.random.PRNGKey(1))
+    macro = dataclasses.replace(PROTOTYPE, sim_level=level, scheme=scheme)
+    cfg = CIMConfig(enabled=True, macro=macro)
+    assert choose_backend(cfg, x, w) == expect
+
+
+def test_auto_scans_large_noisy_bp_layers():
+    macro = dataclasses.replace(PROTOTYPE, sim_level=SimLevel.NOISY)
+    cfg = CIMConfig(enabled=True, macro=macro)
+    x = jnp.zeros((4096, 4320))   # 30 groups × 4096 rows × 4096 cols ≫ 64 MB
+    w = jnp.zeros((4320, 4096))
+    assert choose_backend(cfg, x, w) == "scan"
+
+
+def test_explicit_backend_validation():
+    """The deterministic kernel must refuse stochastic sim levels loudly."""
+    x, w = _xw(jax.random.PRNGKey(2))
+    macro = dataclasses.replace(PROTOTYPE, sim_level=SimLevel.NOISY)
+    cfg = CIMConfig(enabled=True, macro=macro, backend="pallas")
+    with pytest.raises(ValueError, match="deterministic"):
+        cim_matmul(x, w, cfg, key=jax.random.PRNGKey(3))
+    wbs = CIMConfig(enabled=True, backend="pallas").with_scheme(Scheme.WBS)
+    with pytest.raises(ValueError, match="scheme"):
+        cim_matmul(x, w, wbs)
+
+
+# ---------------------------------------------------------------------------
+# backend agreement (acceptance: einsum / scan / pallas-interpret allclose)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("backend", ["einsum", "scan", "pallas",
+                                     "pallas_packed"])
+@pytest.mark.parametrize("k", [144, 300])
+def test_backends_agree_at_ideal(backend, k):
+    x, w = _xw(jax.random.PRNGKey(4), k=k)
+    ref = cim_matmul(x, w, CIMConfig(enabled=True, backend="einsum"))
+    got = cim_matmul(x, w, CIMConfig(enabled=True, backend=backend))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_scan_noise_is_reproducible_and_comparable_to_einsum():
+    """Stochastic backends draw per-group keys in a different order, so
+    outputs differ draw-by-draw — but a given key must be reproducible and
+    the noise magnitude must match the einsum path's."""
+    x, w = _xw(jax.random.PRNGKey(5), k=430)
+    macro = dataclasses.replace(PROTOTYPE, sim_level=SimLevel.NOISY)
+    key = jax.random.PRNGKey(6)
+    ideal = cim_matmul(x, w, CIMConfig(enabled=True, backend="einsum"))
+    errs = {}
+    for backend in ("einsum", "scan"):
+        cfg = CIMConfig(enabled=True, macro=macro, backend=backend)
+        y1 = cim_matmul(x, w, cfg, key=key)
+        y2 = cim_matmul(x, w, cfg, key=key)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+        assert bool(jnp.all(jnp.isfinite(y1)))
+        errs[backend] = float(jnp.linalg.norm(y1 - ideal))
+    ratio = errs["scan"] / errs["einsum"]
+    assert 0.5 < ratio < 2.0, errs
+
+
+# ---------------------------------------------------------------------------
+# packed path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k", [10, 11, 144, 433])
+def test_pack_unpack_roundtrip(k):
+    codes = jax.random.randint(jax.random.PRNGKey(7), (k, 5), 0, 16)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(pack_codes(codes), k)),
+        np.asarray(codes.astype(jnp.float32)))
+
+
+def test_pack_codes_leading_dims():
+    codes = jax.random.randint(jax.random.PRNGKey(8), (3, 7, 4), 0, 16)
+    packed = pack_codes(codes)
+    assert packed.shape == (3, 4, 4) and packed.dtype == jnp.uint8
+    np.testing.assert_array_equal(
+        np.asarray(unpack_codes(packed, 7)),
+        np.asarray(codes.astype(jnp.float32)))
+
+
+def test_packed_col_sums_matches_dense():
+    codes = jax.random.randint(jax.random.PRNGKey(9), (11, 6), 0, 16)
+    np.testing.assert_array_equal(
+        np.asarray(packed_col_sums(pack_codes(codes))),
+        np.asarray(jnp.sum(codes, axis=0).astype(jnp.float32)))
+
+
+@pytest.mark.parametrize("k", [288, 300, 433])
+def test_packed_kernel_bit_exact_vs_unpacked(k):
+    """cim_mvm_pallas_packed ≡ cim_mvm_pallas on random codes, incl. odd K
+    and K not a multiple of the macro depth."""
+    from repro.kernels.ops import cim_mvm_pallas, cim_mvm_pallas_packed
+    key = jax.random.PRNGKey(10)
+    x = jax.random.randint(key, (16, k), 0, 16).astype(jnp.float32)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (k, 24), 0,
+                           16).astype(jnp.float32)
+    y_plain = cim_mvm_pallas(x, w, PROTOTYPE)
+    y_packed = cim_mvm_pallas_packed(x, pack_codes(w), PROTOTYPE)
+    np.testing.assert_array_equal(np.asarray(y_packed), np.asarray(y_plain))
+
+
+@pytest.mark.parametrize("k", [300, 299])
+@pytest.mark.parametrize("backend", [None, "einsum", "scan"])
+def test_prequant_packed_matches_unpacked(k, backend):
+    """Acceptance: the nibble-packed serving path is bit-exact vs the int8
+    container path on every backend (jnp backends unpack on the fly)."""
+    x, w = _xw(jax.random.PRNGKey(11), k=k)
+    cfg = CIMConfig(enabled=True)
+    if backend:
+        cfg = dataclasses.replace(cfg, backend=backend)
+    codes, scale = quantize_weight_offline(w, cfg)
+    y_u = cim_matmul_prequant(x, codes, scale, cfg)
+    y_p = cim_matmul_prequant(x, pack_codes(codes), scale, cfg)
+    np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
+
+
+def test_execute_mvm_packed_correction_is_exact():
+    """Eq. 7 correction from packed_col_sums == correction from dense codes
+    even when pack-padding adds a zero row (odd K)."""
+    key = jax.random.PRNGKey(12)
+    x = jax.nn.relu(jax.random.normal(key, (4, 145)))  # odd K
+    cfg = CIMConfig(enabled=True)
+    s_x = act_scale(x, cfg.act)
+    x_codes, zp = quantize_act(x, s_x, cfg.act)
+    codes = jax.random.randint(jax.random.fold_in(key, 1), (145, 3), 0, 16)
+    s_w = jnp.asarray(0.01)
+    y_dense = execute_mvm(x_codes, codes.astype(jnp.float32), cfg,
+                          s_x=s_x, s_w=s_w, x_zero_point=zp)
+    y_packed = execute_mvm(x_codes, PackedCodes(pack_codes(codes), 145), cfg,
+                           s_x=s_x, s_w=s_w, x_zero_point=zp)
+    np.testing.assert_array_equal(np.asarray(y_packed), np.asarray(y_dense))
+
+
+# ---------------------------------------------------------------------------
+# custom-VJP STE
+# ---------------------------------------------------------------------------
+def test_ste_grad_is_float_matmul_grad():
+    """Acceptance: cim_matmul_ste's custom VJP == d(x@w) exactly."""
+    x, w = _xw(jax.random.PRNGKey(13))
+    cfg = CIMConfig(enabled=True)
+    gx, gw = jax.grad(lambda a, b: jnp.sum(cim_matmul_ste(a, b, cfg) ** 2)
+                      / 1e3, argnums=(0, 1))(x, w)
+    y = cim_matmul(x, w, cfg)          # forward value the cotangent sees
+    g = 2.0 * y / 1e3
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(g @ w.T),
+                               rtol=1e-5, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(x.T @ g),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_ste_forward_equals_cim_matmul():
+    x, w = _xw(jax.random.PRNGKey(14))
+    cfg = CIMConfig(enabled=True)
+    np.testing.assert_array_equal(np.asarray(cim_matmul_ste(x, w, cfg)),
+                                  np.asarray(cim_matmul(x, w, cfg)))
+
+
+def test_ste_vmaps_and_jits():
+    """The MoE expert path vmaps the STE over experts under jit."""
+    x, w = _xw(jax.random.PRNGKey(15), k=144)
+    cfg = CIMConfig(enabled=True)
+    xs, ws = jnp.stack([x, x * 0.5]), jnp.stack([w, w * 2.0])
+    f = jax.jit(jax.vmap(lambda a, b: cim_matmul_ste(a, b, cfg)))
+    out = f(xs, ws)
+    assert out.shape == (2,) + x.shape[:-1] + (w.shape[-1],)
+    g = jax.grad(lambda a: jnp.sum(f(a, ws)))(xs)
+    # unit cotangent → dL/dx = 1 @ wᵀ, i.e. each row is Σ_m w[k, m]
+    expect0 = jnp.broadcast_to(jnp.sum(ws[0], axis=-1), x.shape)
+    np.testing.assert_allclose(np.asarray(g[0]), np.asarray(expect0),
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# wrappers contain no dispatch (acceptance: route through execute_mvm)
+# ---------------------------------------------------------------------------
+def test_wrappers_route_through_engine(monkeypatch):
+    """cim_matmul and cim_matmul_prequant call engine.execute_mvm — no
+    direct backend dispatch left in the wrappers."""
+    import importlib
+    cm = importlib.import_module("repro.core.cim_matmul")
+    calls = []
+    real = cm.execute_mvm
+
+    def spy(*args, **kwargs):
+        calls.append(kwargs.get("backend"))
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(cm, "execute_mvm", spy)
+    x, w = _xw(jax.random.PRNGKey(16), k=144)
+    cfg = CIMConfig(enabled=True)
+    cim_matmul(x, w, cfg)
+    codes, scale = quantize_weight_offline(w, cfg)
+    cim_matmul_prequant(x, codes, scale, cfg)
+    assert len(calls) == 2
+
+
+def test_cim_matmul_grad_under_auto_matches_einsum_backend():
+    """Regression (review): auto→pallas must keep cim_matmul differentiable
+    — the kernel's custom VJP delegates to the einsum pipeline's VJP."""
+    x, w = _xw(jax.random.PRNGKey(17))
+    auto = CIMConfig(enabled=True)
+    ein = dataclasses.replace(auto, backend="einsum")
+    for argnum in (0, 1):
+        g_a = jax.grad(lambda a, b: jnp.sum(cim_matmul(a, b, auto)),
+                       argnums=argnum)(x, w)
+        g_e = jax.grad(lambda a, b: jnp.sum(cim_matmul(a, b, ein)),
+                       argnums=argnum)(x, w)
+        np.testing.assert_allclose(np.asarray(g_a), np.asarray(g_e),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_prequant_packed_grad_wrt_activations():
+    """Input-saliency-style grads flow through the packed kernel (stored
+    codes carry no cotangent)."""
+    x, w = _xw(jax.random.PRNGKey(18))
+    cfg = CIMConfig(enabled=True)
+    codes, scale = quantize_weight_offline(w, cfg)
+    gp = jax.grad(lambda a: jnp.sum(
+        cim_matmul_prequant(a, pack_codes(codes), scale, cfg)))(x)
+    gu = jax.grad(lambda a: jnp.sum(cim_matmul_prequant(
+        a, codes, scale, dataclasses.replace(cfg, backend="einsum"))))(x)
+    np.testing.assert_allclose(np.asarray(gp), np.asarray(gu),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_moe_expert_weights_respect_cim_switch():
+    """Regression (review): stored codes are picked up only under
+    cfg.cim.enabled, matching common.dense / gru._mm."""
+    from repro.configs.registry import SMOKES
+    from repro.models.moe import _expert_weights
+    cfg_on = SMOKES["qwen2-moe-a2.7b"].replace(cim=CIMConfig(enabled=True))
+    cfg_off = cfg_on.replace(cim=CIMConfig(enabled=False))
+    p = {"e_gate": jnp.zeros((4, 8, 8)),
+         "e_gate_q": jnp.zeros((4, 4, 8), jnp.uint8),
+         "e_gate_scale": jnp.ones((4, 1, 1))}
+    assert set(_expert_weights(p, "e_gate", cfg_on)) == {"q", "s"}
+    assert set(_expert_weights(p, "e_gate", cfg_off)) == {"w"}

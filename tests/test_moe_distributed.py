@@ -29,8 +29,8 @@ x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 32))
 sharding.set_mesh(None)
 y_local, aux_local = moe.apply(p, x, cfg, train=False)
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh(2, 2)
 sharding.set_mesh(mesh)
 with mesh:
     y_psum, aux_psum = jax.jit(

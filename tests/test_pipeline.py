@@ -9,8 +9,8 @@ from repro.parallel.pipeline import pipeline_apply
 
 
 def test_single_stage_pipeline_is_identity_schedule():
-    mesh = jax.make_mesh((1,), ("stage",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1,), ("stage",))
     w = jnp.asarray([[2.0]])  # one stage: h → 2h
 
     def stage(params, h):

@@ -62,3 +62,30 @@ def test_eos_retires_slot(setup):
     server.submit(req)
     server.run_until_drained()
     assert req.done and len(req.output) == 3
+
+
+def test_prequant_packed_serving_matches_unpacked():
+    """End-to-end packed-int4 serving: the server's nibble-packed stored-code
+    params produce EXACTLY the int8-container path's tokens (packing is a
+    lossless re-layout), and the decode params really are 4-bit-packed."""
+    from repro.core.cim_matmul import CIMConfig
+    from repro.models.quantize import quantize_params
+
+    cfg = SMOKES["internlm2-1.8b"].replace(dtype="float32",
+                                           cim=CIMConfig(enabled=True))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
+    outs = {}
+    for packed in (True, False):
+        server = Server(params, cfg, n_slots=1, max_len=64,
+                        prequant=True, packed=packed)
+        if packed:
+            q = [v for k, v in jax.tree_util.tree_flatten_with_path(
+                     server.params)[0]
+                 if str(k[-1]).find("_q") >= 0]
+            assert q and all(a.dtype == jnp.uint8 for a in q)
+        req = Request(prompt=[5, 9, 2, 7], max_new_tokens=4)
+        server.submit(req)
+        server.run_until_drained()
+        assert req.done
+        outs[packed] = req.output
+    assert outs[True] == outs[False]
