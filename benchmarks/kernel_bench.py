@@ -1,24 +1,39 @@
 """cim_mvm Pallas kernel micro-bench: interpret-mode wall time vs the jnp
 reference across tile shapes (structural check — real perf is a TPU matter,
-the §Perf roofline reasons from the lowered IR), plus a packed-vs-unpacked
-decode-shape sweep quantifying the nibble-packing HBM win."""
-import time
+the §Perf roofline reasons from the lowered IR), a packed-vs-unpacked
+decode-shape sweep quantifying the nibble-packing HBM win, and a stochastic
+(NOISY) fused-kernel sweep checking the in-kernel PRNG's distributional
+agreement with the einsum reference.
+
+CLI (the CI bench-smoke job):
+    PYTHONPATH=src python -m benchmarks.kernel_bench --small \\
+        --json-out BENCH_ci.json
+writes a machine-readable BENCH_ci.json ({"schema": ..., "rows": [...]})
+so per-PR perf-trajectory data accumulates as workflow artifacts."""
+import argparse
+import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.macro import MacroConfig
-from repro.kernels.ops import cim_mvm_pallas, cim_mvm_pallas_packed, pack_codes
+from repro.core.macro import MacroConfig, SimLevel
+from repro.core.schemes import cim_mvm_codes
+from repro.kernels.ops import (cim_mvm_pallas, cim_mvm_pallas_noisy,
+                               cim_mvm_pallas_packed, pack_codes)
 from repro.kernels.ref import cim_mvm_ref
 
 from .common import row, timeit
 
+BENCH_SCHEMA = "pico-ram/kernel_bench/v1"
 
-def run():
+
+def run(small: bool = False):
     out = []
     cfg = MacroConfig()
     key = jax.random.PRNGKey(0)
-    m, k, n = 256, 1152, 256  # 8 macro groups deep
+    # --small: one macro group deep, one tile — the CI smoke configuration
+    m, k, n = (64, 288, 64) if small else (256, 1152, 256)
     x = jax.random.randint(key, (m, k), 0, 16).astype(jnp.float32)
     w = jax.random.randint(jax.random.fold_in(key, 1), (k, n), 0,
                            16).astype(jnp.float32)
@@ -28,17 +43,49 @@ def run():
                                            gain=cfg.gain,
                                            full_scale=cfg.full_scale()))
     us_ref = timeit(ref, x, w)
-    out.append(row("kernel_ref_jnp_1152x256", us_ref, "oracle"))
-    for bm, bn in ((64, 64), (128, 128), (256, 256)):
+    out.append(row(f"kernel_ref_jnp_{k}x{n}", us_ref, "oracle"))
+    tiles = ((64, 64),) if small else ((64, 64), (128, 128), (256, 256))
+    for bm, bn in tiles:
         fn = lambda a, b: cim_mvm_pallas(a, b, cfg, bm=bm, bn=bn)
         us = timeit(fn, x, w)
         out.append(row(f"kernel_pallas_bm{bm}_bn{bn}", us,
                        f"interpret_mode|vs_ref={us / max(us_ref, 1e-9):.2f}x"))
-    out += run_packed_sweep()
+    out += run_noisy_sweep(small)
+    out += run_packed_sweep(small)
     return out
 
 
-def run_packed_sweep():
+def run_noisy_sweep(small: bool = False):
+    """Stochastic fused kernel vs the einsum NOISY reference: wall time plus
+    the distributional-agreement ratio (σ of the ADC-chain error, fused
+    in-kernel PRNG vs jax.random.normal) — the number the engine tests pin,
+    tracked here per-PR so a PRNG regression shows up in the artifact."""
+    out = []
+    cfg = dataclasses.replace(MacroConfig(), sim_level=SimLevel.NOISY)
+    ideal = dataclasses.replace(cfg, sim_level=SimLevel.IDEAL)
+    key = jax.random.PRNGKey(3)
+    m, k, n = (32, 288, 64) if small else (64, 1152, 256)
+    x = jax.random.randint(key, (m, k), 0, 16).astype(jnp.float32)
+    w = jax.random.randint(jax.random.fold_in(key, 1), (k, n), 0,
+                           16).astype(jnp.float32)
+    us_f = timeit(lambda a, b: cim_mvm_pallas_noisy(a, b, cfg, noise_seed=0),
+                  x, w)
+    us_e = timeit(jax.jit(lambda a, b, kk: cim_mvm_codes(a, b, cfg, key=kk)),
+                  x, w, jax.random.fold_in(key, 2))
+    y_ideal = cim_mvm_pallas(x, w, ideal)
+    s_f = float(jnp.std(cim_mvm_pallas_noisy(x, w, cfg, noise_seed=0)
+                        - y_ideal))
+    s_e = float(jnp.std(cim_mvm_codes(x, w, cfg,
+                                      key=jax.random.fold_in(key, 2))
+                        - y_ideal))
+    out.append(row(
+        f"kernel_pallas_noisy_m{m}_k{k}_n{n}", us_f,
+        f"einsum_noisy_us={us_e:.1f}|err_sigma fused={s_f:.3f} "
+        f"einsum={s_e:.3f} ratio={s_f / max(s_e, 1e-9):.3f}"))
+    return out
+
+
+def run_packed_sweep(small: bool = False):
     """Packed vs unpacked weights across decode shapes (small M = batch
     slots, big K×N = the weight matrix that dominates decode HBM traffic).
 
@@ -50,7 +97,9 @@ def run_packed_sweep():
     out = []
     cfg = MacroConfig()
     key = jax.random.PRNGKey(2)
-    for m, k, n in ((8, 1152, 512), (8, 2304, 2048), (32, 4320, 1024)):
+    shapes = ((8, 576, 128),) if small \
+        else ((8, 1152, 512), (8, 2304, 2048), (32, 4320, 1024))
+    for m, k, n in shapes:
         x = jax.random.randint(key, (m, k), 0, 16).astype(jnp.float32)
         w = jax.random.randint(jax.random.fold_in(key, k + n), (k, n), 0,
                                16).astype(jnp.float32)
@@ -66,5 +115,35 @@ def run_packed_sweep():
     return out
 
 
+def rows_to_json(rows: list[str]) -> dict:
+    """CSV rows ("name,us,derived") → the BENCH_ci.json document."""
+    parsed = []
+    for line in rows:
+        name, us, derived = line.split(",", 2)
+        parsed.append({"name": name, "us": float(us), "derived": derived})
+    return {
+        "schema": BENCH_SCHEMA,
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "rows": parsed,
+    }
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--small", action="store_true",
+                    help="CI smoke configuration (one group deep, one tile)")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="also write the rows as a JSON document "
+                         "(the bench-smoke artifact)")
+    args = ap.parse_args(argv)
+    rows = run(small=args.small)
+    if args.json_out:
+        doc = rows_to_json(rows)
+        with open(args.json_out, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {args.json_out} ({len(doc['rows'])} rows)", flush=True)
+
+
 if __name__ == "__main__":
-    run()
+    main()

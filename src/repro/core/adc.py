@@ -52,6 +52,25 @@ def inl_curve(code_frac: jax.Array, amp_lsb: float, seed: int = 0) -> jax.Array:
     return (amp_lsb - jit_amp) * scale * curve + jitter
 
 
+def stochastic_transfer_params(cfg: MacroConfig) -> dict:
+    """σ / INL settings of the stochastic ADC transfer for cfg.sim_level.
+
+    Single source of truth shared by `adc_quantize` (the jnp reference
+    pipeline) and the fused stochastic Pallas kernel
+    (`kernels.cim_mvm.cim_mvm_grouped_noisy`): both must inject the same
+    pre-rounding thermal σ and the same INL instance so their output
+    DISTRIBUTIONS agree (the draws themselves come from different PRNGs).
+
+      NOISY → σ = sigma_thermal_lsb (0.277 pre-rounding), no INL;
+      FULL  → σ = sigma_thermal()  (PVT-scaled), + the Fig. 15 INL curve.
+    """
+    if cfg.sim_level == SimLevel.FULL:
+        return {"sigma": float(cfg.sigma_thermal()), "apply_inl": True,
+                "inl_amp": float(cfg.inl_amp_lsb)}
+    return {"sigma": float(cfg.sigma_thermal_lsb), "apply_inl": False,
+            "inl_amp": 0.0}
+
+
 def adc_quantize(v_analog: jax.Array, cfg: MacroConfig, *,
                  key: jax.Array | None = None,
                  act_bits_active: int | None = None,
@@ -72,11 +91,11 @@ def adc_quantize(v_analog: jax.Array, cfg: MacroConfig, *,
     x = v_analog / lsb
 
     if cfg.sim_level != SimLevel.IDEAL:
-        if cfg.sim_level == SimLevel.FULL:
-            x = x + inl_curve(jnp.clip(x / levels, 0.0, 1.0), cfg.inl_amp_lsb, inl_seed)
-            sigma = cfg.sigma_thermal()
-        else:
-            sigma = cfg.sigma_thermal_lsb
+        st = stochastic_transfer_params(cfg)
+        sigma = st["sigma"]
+        if st["apply_inl"]:
+            x = x + inl_curve(jnp.clip(x / levels, 0.0, 1.0), st["inl_amp"],
+                              inl_seed)
         if key is not None:
             x = x + sigma * jax.random.normal(key, x.shape, dtype=x.dtype)
 

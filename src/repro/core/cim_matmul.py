@@ -37,13 +37,26 @@ from .quant import (ActQuantConfig, WeightQuantConfig, act_scale,
 
 @dataclasses.dataclass(frozen=True)
 class CIMConfig:
-    """How (and whether) a model's matmuls run on the simulated macro."""
+    """How (and whether) a model's matmuls run on the simulated macro.
+
+    `noise_seed` names one stochastic instance of the converter chain at
+    NOISY/FULL sim levels: setting it (a) routes backend="auto" to the
+    fused stochastic Pallas kernel and (b) makes jnp-backend runs
+    seeded-reproducible (engine derives the key from (noise_seed, inl_seed)
+    when no explicit key is passed). None (default) keeps the legacy
+    behaviour — jnp backends, noise only when a key is supplied. Repeated
+    same-shaped MVMs under one (noise_seed, inl_seed) reuse one noise
+    realization (the reproducibility contract); vary inl_seed per
+    layer/step to decorrelate them.
+    """
 
     enabled: bool = False
     macro: MacroConfig = dataclasses.field(default_factory=MacroConfig)
     act: ActQuantConfig = dataclasses.field(default_factory=ActQuantConfig)
     weight: WeightQuantConfig = dataclasses.field(default_factory=WeightQuantConfig)
-    backend: Literal["auto", "einsum", "scan", "pallas", "pallas_packed"] = "auto"
+    backend: Literal["auto", "einsum", "scan", "pallas", "pallas_packed",
+                     "pallas_noisy", "pallas_noisy_packed"] = "auto"
+    noise_seed: int | None = None
 
     def with_scheme(self, scheme) -> "CIMConfig":
         return dataclasses.replace(
@@ -70,23 +83,30 @@ def cim_matmul(x: jax.Array, w: jax.Array, cfg: CIMConfig, *,
                        x_zero_point=zp, key=key, inl_seed=inl_seed)
 
 
-def cim_matmul_prequant(x: jax.Array, w_codes: jax.Array, w_scale: jax.Array,
+def cim_matmul_prequant(x: jax.Array, w_codes, w_scale: jax.Array | None,
                         cfg: CIMConfig, *, key: jax.Array | None = None,
                         inl_seed: int = 0) -> jax.Array:
     """CIM matmul against OFFLINE-quantized weights (§Perf serving path).
 
-    w_codes are the stored unsigned 4-bit codes — either an int8 container
-    [K, M] (one code per byte) or the nibble-packed uint8 wire format
-    [ceil(K/2), M] produced by `models.quantize.quantize_params` /
-    `kernels.ops.pack_codes` (two codes per byte, the SRAM-density-faithful
-    layout). Packed halves weight HBM traffic again vs int8 (4× vs bf16) —
-    and is the honest deployment flow: a CIM chip never sees float weights
-    at inference.
+    w_codes are the stored unsigned 4-bit codes — an int8 container [K, M]
+    (one code per byte), the nibble-packed uint8 wire format [ceil(K/2), M]
+    produced by `models.quantize.quantize_params` / `kernels.ops.pack_codes`
+    (two codes per byte, the SRAM-density-faithful layout), or an
+    `engine.PackedCodes` container (which may carry its own scales —
+    w_scale=None then uses them). Packed halves weight HBM traffic again vs
+    int8 (4× vs bf16) — and is the honest deployment flow: a CIM chip never
+    sees float weights at inference.
+
+    w_scale is per-matrix or per-output-channel ([..., 1, M], from
+    `quantize_weight_offline` under cfg.weight.per_channel).
     """
     s_x = act_scale(x, cfg.act)
     x_codes, zp = quantize_act(x, s_x, cfg.act)
-    if w_codes.dtype == jnp.uint8:  # nibble-packed wire format
-        weights = PackedCodes(w_codes, x.shape[-1])
+    if isinstance(w_codes, PackedCodes):
+        weights = w_codes if w_scale is None \
+            else PackedCodes(w_codes.data, w_codes.k, w_scale)
+    elif w_codes.dtype == jnp.uint8:  # nibble-packed wire format
+        weights = PackedCodes(w_codes, x.shape[-1], w_scale)
     else:
         weights = w_codes.astype(jnp.float32)
     return execute_mvm(x_codes, weights, cfg, s_x=s_x, s_w=w_scale,
@@ -96,13 +116,20 @@ def cim_matmul_prequant(x: jax.Array, w_codes: jax.Array, w_scale: jax.Array,
 def quantize_weight_offline(w: jax.Array, cfg: CIMConfig):
     """bf16/f32 weight → (int8 stored codes, scale) for the prequant path.
 
-    Scales are per-matrix: stacked-layer weights [L, ..., K, M] get one scale
-    per leading index (broadcastable [L, ..., 1, 1]) so each layer's matrix
-    quantizes against its own range. Pack with `kernels.ops.pack_codes` for
-    the nibble-packed serving format.
+    Scales are per-matrix by default: stacked-layer weights [L, ..., K, M]
+    get one scale per leading index (broadcastable [L, ..., 1, 1]) so each
+    layer's matrix quantizes against its own range. Under
+    cfg.weight.per_channel each OUTPUT channel gets its own scale —
+    s_w [..., 1, M], still broadcastable against the codes — which tightens
+    the 4-bit grid to every column's range (the standard accuracy win for
+    nets whose channel ranges differ by orders of magnitude; columns map to
+    distinct MAC lines on the macro, so per-channel s_w is free digital
+    post-scaling, not extra analog hardware). Pack with
+    `kernels.ops.pack_codes` for the nibble-packed serving format.
     """
     wf = w.astype(jnp.float32)
-    amax = jnp.max(jnp.abs(wf), axis=(-2, -1), keepdims=True)
+    axes = (-2,) if cfg.weight.per_channel else (-2, -1)
+    amax = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)
     s_w = jnp.maximum(amax, 1e-8) / cfg.weight.qmax
     codes = quantize_weight(wf, s_w, cfg.weight)
     return codes.astype(jnp.int8), s_w.astype(jnp.float32)

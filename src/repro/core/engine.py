@@ -27,16 +27,62 @@ evaluated:
                    (two u4 codes per byte) and unpacked in VMEM    interpret)
                    — the TPU analogue of the paper's 559 Kb/mm²
                    4-bit SRAM storage density
+  "pallas_noisy"   stochastic fused kernel: the NOISY/FULL         TPU (or
+                   TD-ADC transfer (thermal σ + INL instance)      interpret)
+                   with per-conversion noise drawn IN VMEM from
+                   a counter-based PRNG — PVT/QAT noise studies
+                   at fused-kernel throughput
+  "pallas_noisy_packed"  stochastic + nibble-packed weights; the   TPU (or
+                   noise draw is independent of the container,     interpret)
+                   so it is bit-identical to pallas_noisy under
+                   the same seed
 
 The digital epilogue (Eq. 7 offset/zero-point correction, × s_x·s_w
 dequantization) is shared by all backends, exactly as the paper's adder
 tree + digital shift-and-add is shared by all schemes.
+
+noise_seed semantics
+--------------------
+`CIMConfig.noise_seed` (or the `noise_seed=` override on `execute_mvm`)
+names one stochastic-instance of the converter chain. It is the ONLY way to
+reach the fused stochastic kernels through `backend="auto"`:
+
+  * auto + BP + NOISY/FULL + noise_seed set → "pallas_noisy[_packed]";
+    without a seed the jnp backends (einsum, or scan for large layers) run,
+    drawing noise from the optional `key` argument exactly as before.
+  * The same seed is bit-reproducible: outputs are a pure function of
+    (operands, config, noise_seed, inl_seed) in BOTH compiled and interpret
+    mode — the kernel PRNG is counter-based (see kernels/cim_mvm.py), not
+    the hardware RNG. Corollary: two same-shaped MVMs under one
+    (noise_seed, inl_seed) draw the SAME noise realization; thread a
+    distinct inl_seed per layer/step (the Fig. 18 instance knob) when a
+    study needs decorrelated conversions across calls.
+  * jnp backends given a noise_seed (and no explicit key) derive
+    key = PRNGKey(noise_seed), so einsum/scan runs are seeded-reproducible
+    too; the jnp and fused DRAWS differ (different PRNGs) but agree in
+    distribution — the engine tests pin mean/variance agreement.
+
+per-channel weight scales
+-------------------------
+`s_w` may be per-matrix (scalar / [..., 1, 1]) or per-output-channel
+([..., 1, M], emitted by `quantize_weight_offline` under
+`WeightQuantConfig.per_channel`). The Eq. 7 integer correction is
+scale-free, so per-channel dequant is exactly `y_int · s_x · s_w[..., 0, :]`
+— broadcast over the M axis after the correction. `PackedCodes` can carry
+its channel scales (`scale` field) so the packed wire format stays
+self-describing.
+
+`REPRO_FORCE_JNP=1` in the environment forces `backend="auto"` to resolve
+to the jnp backends only (einsum/scan) — the escape hatch for environments
+where interpret-mode Pallas is unavailable; explicit backend names are
+honored unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
+import os
 from typing import Callable, Protocol
 
 import jax
@@ -58,17 +104,23 @@ class PackedCodes:
     data [..., ceil(K/2), M] uint8 (row 2i low nibble, 2i+1 high); `k` is
     the logical reduction length before pack-padding. This is the at-rest /
     HBM format — 4 bits per weight, like the SRAM array itself.
+
+    `scale` optionally carries the dequantization scale(s) alongside the
+    codes — per-matrix ([..., 1, 1] / scalar) or per-output-channel
+    ([..., 1, M]) — making the container self-describing: `execute_mvm`
+    falls back to it when no explicit `s_w` is supplied.
     """
 
     data: jax.Array
     k: int
+    scale: jax.Array | None = None
 
     def tree_flatten(self):
-        return (self.data,), self.k
+        return (self.data, self.scale), self.k
 
     @classmethod
     def tree_unflatten(cls, k, children):
-        return cls(children[0], k)
+        return cls(children[0], k, children[1])
 
     @property
     def n_cols(self) -> int:
@@ -89,10 +141,13 @@ class CIMBackend(Protocol):
 
     x_codes [..., K] unsigned DAC codes; weights are dense codes [K, M]
     (or PackedCodes for packed-capable backends). Returns float32 [..., M].
+    Stochastic draws come from `key` (jnp backends) or `noise_seed` (the
+    fused stochastic kernels); deterministic backends ignore both.
     """
 
     def __call__(self, x_codes: jax.Array, weights, cfg: MacroConfig, *,
-                 key: jax.Array | None, inl_seed: int) -> jax.Array: ...
+                 key: jax.Array | None, inl_seed: int,
+                 noise_seed=None) -> jax.Array: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,13 +189,15 @@ _ALL_LEVELS = (SimLevel.IDEAL, SimLevel.NOISY, SimLevel.FULL)
 
 @register_backend("einsum", schemes=_ALL_SCHEMES, sim_levels=_ALL_LEVELS)
 def _einsum_backend(x_codes, w_codes, cfg: MacroConfig, *, key=None,
-                    inl_seed=0):
+                    inl_seed=0, noise_seed=None):
+    del noise_seed  # jnp backends draw from `key` (derived in execute_mvm)
     return cim_mvm_codes(x_codes, w_codes, cfg, key=key, inl_seed=inl_seed)
 
 
 @register_backend("scan", schemes=_ALL_SCHEMES, sim_levels=_ALL_LEVELS)
 def _scan_backend(x_codes, w_codes, cfg: MacroConfig, *, key=None,
-                  inl_seed=0):
+                  inl_seed=0, noise_seed=None):
+    del noise_seed
     """Group-sequential BP MVM: identical math to schemes.bp_mvm, O(M) live
     memory. WBS/BS run their own per-bit-plane loops on the einsum path (BP
     is the paper's deployed scheme), so non-BP requests fall through.
@@ -195,16 +252,16 @@ _pallas_mvm.defvjp(_pallas_mvm_fwd, _pallas_mvm_bwd)
 
 @register_backend("pallas", schemes=(Scheme.BP,), sim_levels=(SimLevel.IDEAL,))
 def _pallas_backend(x_codes, w_codes, cfg: MacroConfig, *, key=None,
-                    inl_seed=0):
-    del key, inl_seed  # deterministic IDEAL transfer only
+                    inl_seed=0, noise_seed=None):
+    del key, inl_seed, noise_seed  # deterministic IDEAL transfer only
     return _pallas_mvm(x_codes, w_codes, cfg)
 
 
 @register_backend("pallas_packed", schemes=(Scheme.BP,),
                   sim_levels=(SimLevel.IDEAL,), packed=True)
 def _pallas_packed_backend(x_codes, weights: PackedCodes, cfg: MacroConfig, *,
-                           key=None, inl_seed=0):
-    del key, inl_seed
+                           key=None, inl_seed=0, noise_seed=None):
+    del key, inl_seed, noise_seed
     return _packed_mvm(x_codes, weights.data, weights.k, cfg)
 
 
@@ -232,11 +289,114 @@ _packed_mvm.defvjp(_packed_mvm_fwd, _packed_mvm_bwd)
 
 
 # ---------------------------------------------------------------------------
+# stochastic fused backends (NOISY/FULL transfer, in-kernel PRNG)
+# ---------------------------------------------------------------------------
+def _resolve_noise_seed(noise_seed, key):
+    """int32 scalar seed for the fused stochastic kernels.
+
+    Prefers the explicit noise_seed (the reproducibility contract); falls
+    back to folding the jnp PRNG key's bits when only `key` was supplied, so
+    explicit backend="pallas_noisy" keeps working from the legacy key-based
+    call sites.
+    """
+    if noise_seed is not None:
+        return jnp.asarray(noise_seed, jnp.int32)
+    if key is not None:
+        kd = key
+        if jnp.issubdtype(jnp.asarray(kd).dtype, jax.dtypes.prng_key):
+            kd = jax.random.key_data(kd)
+        return jnp.reshape(kd, (-1,))[-1].astype(jnp.int32)
+    raise ValueError(
+        "stochastic Pallas backend needs CIMConfig.noise_seed (or an "
+        "explicit PRNG key) — at IDEAL sim level use pallas/pallas_packed")
+
+
+# Like _pallas_mvm: the kernel has no VJP rule, but auto-selected backends
+# must keep cim_matmul differentiable. Backward is the VJP of the einsum
+# pipeline's deterministic STE transfer (key=None → no noise term; the
+# noise enters additively pre-rounding, so its STE derivative is identity
+# anyway).
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _noisy_mvm(x_codes, w_codes, seed, cfg: MacroConfig, inl_seed: int):
+    from repro.kernels.ops import cim_mvm_pallas_noisy
+    return cim_mvm_pallas_noisy(x_codes, w_codes, cfg, noise_seed=seed,
+                                inl_seed=inl_seed)
+
+
+def _noisy_mvm_fwd(x_codes, w_codes, seed, cfg, inl_seed):
+    return _noisy_mvm(x_codes, w_codes, seed, cfg, inl_seed), (x_codes,
+                                                               w_codes)
+
+
+def _noisy_mvm_bwd(cfg, inl_seed, res, g):
+    x_codes, w_codes = res
+    _, vjp = jax.vjp(lambda x, w: _einsum_backend(x, w, cfg,
+                                                  inl_seed=inl_seed),
+                     x_codes, w_codes)
+    return (*vjp(g), None)
+
+
+_noisy_mvm.defvjp(_noisy_mvm_fwd, _noisy_mvm_bwd)
+
+
+@register_backend("pallas_noisy", schemes=(Scheme.BP,),
+                  sim_levels=(SimLevel.NOISY, SimLevel.FULL))
+def _pallas_noisy_backend(x_codes, w_codes, cfg: MacroConfig, *, key=None,
+                          inl_seed=0, noise_seed=None):
+    seed = _resolve_noise_seed(noise_seed, key)
+    return _noisy_mvm(x_codes, w_codes, seed, cfg, inl_seed)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _noisy_packed_mvm(x_codes, w_packed, seed, k: int, cfg: MacroConfig,
+                      inl_seed: int):
+    from repro.kernels.ops import cim_mvm_pallas_noisy_packed
+    return cim_mvm_pallas_noisy_packed(x_codes, w_packed, cfg,
+                                       noise_seed=seed, inl_seed=inl_seed)
+
+
+def _noisy_packed_mvm_fwd(x_codes, w_packed, seed, k, cfg, inl_seed):
+    return (_noisy_packed_mvm(x_codes, w_packed, seed, k, cfg, inl_seed),
+            (x_codes, w_packed))
+
+
+def _noisy_packed_mvm_bwd(k, cfg, inl_seed, res, g):
+    # stored codes carry no cotangent (see _packed_mvm_bwd)
+    x_codes, w_packed = res
+    from repro.kernels.ops import unpack_codes
+    w_codes = unpack_codes(w_packed, k)
+    _, vjp = jax.vjp(lambda x: _einsum_backend(x, w_codes, cfg,
+                                               inl_seed=inl_seed), x_codes)
+    return vjp(g)[0], None, None
+
+
+_noisy_packed_mvm.defvjp(_noisy_packed_mvm_fwd, _noisy_packed_mvm_bwd)
+
+
+@register_backend("pallas_noisy_packed", schemes=(Scheme.BP,),
+                  sim_levels=(SimLevel.NOISY, SimLevel.FULL), packed=True)
+def _pallas_noisy_packed_backend(x_codes, weights: PackedCodes,
+                                 cfg: MacroConfig, *, key=None, inl_seed=0,
+                                 noise_seed=None):
+    seed = _resolve_noise_seed(noise_seed, key)
+    return _noisy_packed_mvm(x_codes, weights.data, seed, weights.k, cfg,
+                             inl_seed)
+
+
+# ---------------------------------------------------------------------------
 # backend selection
 # ---------------------------------------------------------------------------
 # Materializing the [rows, G, M] pre-ADC tensor beyond this switches the
 # jnp path from einsum to the group-sequential scan.
 _EINSUM_BYTES_CEILING = 64 << 20
+
+
+def _force_jnp() -> bool:
+    """REPRO_FORCE_JNP=1: auto-selection never picks a Pallas kernel — the
+    escape hatch for environments without interpret-mode Pallas support.
+    Read at trace time; explicit backend names bypass it."""
+    return os.environ.get("REPRO_FORCE_JNP", "").strip().lower() \
+        in ("1", "true", "yes")
 
 
 def choose_backend(cfg, x_codes: jax.Array, weights) -> str:
@@ -246,17 +406,24 @@ def choose_backend(cfg, x_codes: jax.Array, weights) -> str:
       * IDEAL + BP → the fused Pallas kernel — "pallas_packed" when the
         weights are nibble-packed, else "pallas" (interpret mode executes
         the same kernel body on CPU, keeping tests honest);
-      * stochastic sim levels or WBS/BS baselines → jnp backends, scanning
-        the reduction groups once the pre-ADC tensor would exceed ~64 MB.
+      * NOISY/FULL + BP with a noise_seed → the fused stochastic kernel
+        ("pallas_noisy" / "pallas_noisy_packed");
+      * otherwise (no seed, WBS/BS baselines, REPRO_FORCE_JNP=1) → jnp
+        backends, scanning the reduction groups once the pre-ADC tensor
+        would exceed ~64 MB.
 
-    `cfg` is the layer-level CIMConfig (duck-typed: .backend, .macro).
+    `cfg` is the layer-level CIMConfig (duck-typed: .backend, .macro and
+    optionally .noise_seed).
     """
     macro: MacroConfig = cfg.macro
     packed = isinstance(weights, PackedCodes)
     if cfg.backend != "auto":
         return get_backend(cfg.backend).name
-    if macro.sim_level == SimLevel.IDEAL and macro.scheme == Scheme.BP:
-        return "pallas_packed" if packed else "pallas"
+    if macro.scheme == Scheme.BP and not _force_jnp():
+        if macro.sim_level == SimLevel.IDEAL:
+            return "pallas_packed" if packed else "pallas"
+        if getattr(cfg, "noise_seed", None) is not None:
+            return "pallas_noisy_packed" if packed else "pallas_noisy"
     k = weights.k if packed else weights.shape[-2]
     m = weights.n_cols if packed else weights.shape[-1]
     groups = -(-k // macro.n_rows)
@@ -269,9 +436,10 @@ def choose_backend(cfg, x_codes: jax.Array, weights) -> str:
 # the single entry point
 # ---------------------------------------------------------------------------
 def execute_mvm(x_codes: jax.Array, weights, cfg, *,
-                s_x: jax.Array, s_w: jax.Array, x_zero_point: jax.Array,
+                s_x: jax.Array, s_w: jax.Array | None, x_zero_point: jax.Array,
                 key: jax.Array | None = None, inl_seed: int = 0,
-                backend: str | None = None) -> jax.Array:
+                backend: str | None = None,
+                noise_seed=None) -> jax.Array:
     """Run one MVM through the full simulated datapath and dequantize.
 
     x_codes [..., K] unsigned DAC codes; weights are dense stored codes
@@ -280,22 +448,51 @@ def execute_mvm(x_codes: jax.Array, weights, cfg, *,
     selection, reduction padding (inside the backends — zero codes are
     unselected SRAM rows), the grouped MVM, the Eq. 7 signed/affine
     correction, and the × s_x·s_w dequantization. Returns float32 [..., M].
+
+    `s_w` may be per-matrix or per-output-channel ([..., 1, M]); pass None
+    to use the scales a PackedCodes container carries. `noise_seed`
+    overrides cfg.noise_seed for this call (see module docstring).
     """
     macro: MacroConfig = cfg.macro
+    if noise_seed is None:
+        noise_seed = getattr(cfg, "noise_seed", None)
     if macro.sim_level == SimLevel.IDEAL:
         key = None  # no stochastic terms at the ideal sim level
+        noise_seed = None
+    elif key is None and noise_seed is not None:
+        # seeded reproducibility on the jnp backends too: einsum/scan given
+        # only a noise_seed draw from the derived key (DCE'd when the fused
+        # kernel runs — it consumes the integer seed directly). inl_seed is
+        # folded in, mirroring the fused kernel's counter salt: repeated
+        # same-shaped MVMs under one (noise_seed, inl_seed) reuse one noise
+        # realization BY DESIGN (that is what bit-reproducibility means);
+        # thread a distinct inl_seed per layer/step to decorrelate them.
+        key = jax.random.fold_in(jax.random.PRNGKey(noise_seed), inl_seed)
     name = backend or choose_backend(cfg, x_codes, weights)
     spec = get_backend(name)
     if macro.scheme not in spec.schemes:
         raise ValueError(f"backend {name!r} does not implement scheme "
                          f"{macro.scheme}; use einsum/scan")
     if macro.sim_level not in spec.sim_levels:
-        raise ValueError(f"backend {name!r} is deterministic; sim level "
-                         f"{macro.sim_level} needs a jnp backend")
+        if SimLevel.IDEAL in spec.sim_levels:
+            raise ValueError(
+                f"backend {name!r} is deterministic; sim level "
+                f"{macro.sim_level} needs a stochastic backend "
+                f"(einsum/scan/pallas_noisy)")
+        raise ValueError(
+            f"backend {name!r} models the stochastic converter chain only; "
+            f"sim level {macro.sim_level} runs on pallas/pallas_packed or "
+            f"the jnp backends")
 
     packed = isinstance(weights, PackedCodes)
+    if s_w is None:
+        s_w = weights.scale if packed else None
+        if s_w is None:
+            raise ValueError("execute_mvm needs s_w (or a PackedCodes "
+                             "container carrying its scale)")
     if packed and spec.packed:
-        y_codes = spec.fn(x_codes, weights, macro, key=key, inl_seed=inl_seed)
+        y_codes = spec.fn(x_codes, weights, macro, key=key, inl_seed=inl_seed,
+                          noise_seed=noise_seed)
         from repro.kernels.ops import packed_col_sums
         sum_w = packed_col_sums(weights.data)
         k = weights.k
@@ -305,15 +502,22 @@ def execute_mvm(x_codes: jax.Array, weights, cfg, *,
             from repro.kernels.ops import pack_codes
             y_codes = spec.fn(x_codes, PackedCodes(pack_codes(w_codes),
                                                    w_codes.shape[-2]),
-                              macro, key=key, inl_seed=inl_seed)
+                              macro, key=key, inl_seed=inl_seed,
+                              noise_seed=noise_seed)
         else:
             y_codes = spec.fn(x_codes, w_codes, macro, key=key,
-                              inl_seed=inl_seed)
+                              inl_seed=inl_seed, noise_seed=noise_seed)
         sum_w = jnp.sum(w_codes, axis=-2)
         k = w_codes.shape[-2]
 
     y_int = signed_correction(y_codes, x_codes, None,
                               w_offset=cfg.weight.offset,
                               x_zero_point=x_zero_point, sum_w=sum_w, k=k)
-    s_w_out = jnp.reshape(s_w, (-1,)) if cfg.weight.per_channel else s_w
+    # Per-channel scales arrive broadcast-shaped against the stored codes
+    # ([..., 1, M]); drop the reduction axis so they broadcast against the
+    # [..., M] output instead (Eq. 7 is scale-free integer arithmetic, so
+    # dequant is the only place the channel axis matters).
+    s_w_out = s_w
+    if cfg.weight.per_channel and getattr(s_w, "ndim", 0) >= 2:
+        s_w_out = s_w[..., 0, :]
     return y_int * s_x * s_w_out

@@ -21,10 +21,24 @@ Layout choices (TPU v5e target):
     step ≈ bm·144·4 + 144·bn·4 + bm·bn·4 ≈ 213 KB ≪ 16 MB, leaving room for
     the pipeline's double buffering.
 
-The kernel is deterministic (SimLevel.IDEAL transfer). Stochastic error
-injection (thermal noise / INL) belongs to QAT experiments and runs on the
-jnp backends; a production TPU deployment would never inject noise at
-inference time.
+Deterministic (SimLevel.IDEAL) and stochastic (NOISY/FULL) variants share
+the grid/layout; the stochastic kernels additionally draw the TD-ADC's
+thermal-noise sample per conversion IN VMEM — mirroring the dual-threshold
+TD-ADC, which samples its comparator noise independently at every
+conversion — so QAT noise studies run at fused-kernel throughput instead of
+falling back to the einsum/scan jnp paths.
+
+PRNG choice: a counter-based SplitMix32/murmur3-style hash over
+(seed, row, col, group) evaluated with plain uint32 vector ops. The
+hardware `pltpu.prng_seed`/`prng_random_bits` primitives have NO CPU
+interpret-mode lowering on the pinned toolchain (jax 0.4.37 raises
+NotImplementedError), and their draws would differ between compiled and
+interpret mode anyway. The counter construction gives bit-identical output
+on TPU and in CI's interpret mode, and makes every conversion's draw a pure
+function of (noise_seed, output coordinate, group) — reproducible per seed
+by construction. Gaussians come from the Irwin–Hall sum of 12 uniforms
+(exact mean 0 / variance 1; tails truncate at ±6σ, far past anything the
+±0.28-LSB thermal term can push through the code rounding).
 """
 from __future__ import annotations
 
@@ -39,6 +53,216 @@ from jax.experimental.pallas import tpu as pltpu
 # both so the kernels import under whichever toolchain is baked in.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
+
+
+# ---------------------------------------------------------------------------
+# in-kernel counter-based PRNG (uint32 hash — works compiled AND interpreted)
+# ---------------------------------------------------------------------------
+def _mix32(h):
+    """murmur3 finalizer: a bijective uint32 avalanche (all-ops VPU-native)."""
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> jnp.uint32(16))
+    return h
+
+
+_GOLDEN32 = 0x9E3779B9  # 2^32/φ — the SplitMix increment
+
+
+def _counter_base(seed, rows, cols, group):
+    """Per-element uint32 hash state from (seed, global coords, group).
+
+    Full 32-bit words are absorbed sequentially (sponge-style) instead of
+    being packed into one index, so no shape is large enough to overflow the
+    counter into systematic collisions.
+    """
+    h = _mix32(seed.astype(jnp.uint32) ^ jnp.uint32(_GOLDEN32))
+    h = _mix32(h ^ rows.astype(jnp.uint32))
+    h = _mix32(h ^ cols.astype(jnp.uint32))
+    h = _mix32(h ^ (group.astype(jnp.uint32) * jnp.uint32(0x01000193)))
+    return h
+
+
+def _normal12(base):
+    """Standard-normal draw per element: Irwin–Hall sum of 12 uniforms.
+
+    Draw j is SplitMix-style: mix(base + j·GOLDEN). Exact mean 0 and
+    variance 1 — the distributional-agreement contract the engine tests
+    check against the jax.random.normal reference path.
+    """
+    acc = jnp.zeros(base.shape, jnp.float32)
+    for j in range(12):
+        bits = _mix32(base + jnp.uint32((j + 1) * _GOLDEN32 & 0xFFFFFFFF))
+        acc = acc + bits.astype(jnp.float32)
+    return acc * jnp.float32(2.0 ** -32) - jnp.float32(6.0)
+
+
+def _unpack_nibbles(w_ref):
+    """VMEM nibble unpack shared by the packed kernels: [half, bn] uint8
+    bytes → [2·half, bn] f32 codes (row 2i low nibble, 2i+1 high)."""
+    wp = w_ref[...].astype(jnp.int32)
+    lo = (wp & 15).astype(jnp.float32)
+    hi = ((wp >> 4) & 15).astype(jnp.float32)
+    half, bn = wp.shape
+    return jnp.stack([lo, hi], axis=1).reshape(2 * half, bn)
+
+
+def _stochastic_transfer(part, *, inv_lsb, lsb, levels, sigma, inl_amp,
+                         inl_seed, apply_inl, seed, bm, bn):
+    """NOISY/FULL TD-ADC transfer on one [bm, bn] pre-ADC tile, in VMEM.
+
+    Mirrors core.adc.adc_quantize order exactly: scale to LSB units → INL
+    (FULL only, the same `inl_curve` instance for a given inl_seed) →
+    thermal noise → clip/round → ×LSB reconstruction.
+    """
+    x = part * inv_lsb
+    if apply_inl:
+        from repro.core.adc import inl_curve
+        x = x + inl_curve(jnp.clip(x / float(levels), 0.0, 1.0), inl_amp,
+                          inl_seed)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 0) \
+        + pl.program_id(0) * bm
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1) \
+        + pl.program_id(1) * bn
+    # inl_seed salts the counter (statically): one noise_seed names a chip
+    # instance, while distinct inl_seed values decorrelate the draws of
+    # same-shaped MVMs — the same per-macro-instance knob Fig. 18 uses.
+    salted = seed.astype(jnp.uint32) \
+        ^ jnp.uint32((inl_seed * _GOLDEN32) & 0xFFFFFFFF)
+    base = _counter_base(salted, rows, cols, pl.program_id(2))
+    x = x + jnp.float32(sigma) * _normal12(base)
+    code = jnp.clip(jnp.round(x), 0.0, float(levels - 1))
+    return code * lsb
+
+
+def _cim_mvm_noisy_kernel(seed_ref, x_ref, w_ref, o_ref, *, inv_lsb: float,
+                          lsb: float, levels: int, sigma: float,
+                          inl_amp: float, inl_seed: int, apply_inl: bool):
+    """Stochastic twin of _cim_mvm_kernel: per-conversion noise in VMEM."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    bm, bn = o_ref.shape
+    o_ref[...] += _stochastic_transfer(
+        part, inv_lsb=inv_lsb, lsb=lsb, levels=levels, sigma=sigma,
+        inl_amp=inl_amp, inl_seed=inl_seed, apply_inl=apply_inl,
+        seed=seed_ref[0, 0], bm=bm, bn=bn)
+
+
+def _cim_mvm_noisy_packed_kernel(seed_ref, x_ref, w_ref, o_ref, *,
+                                 inv_lsb: float, lsb: float, levels: int,
+                                 sigma: float, inl_amp: float, inl_seed: int,
+                                 apply_inl: bool):
+    """Stochastic twin of _cim_mvm_packed_kernel (nibble unpack in VMEM).
+
+    The noise draw depends only on (seed, output coordinate, group), never
+    on the weight container — so packed and unpacked stochastic kernels are
+    bit-identical under the same seed (tested)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    part = jnp.dot(x_ref[...], _unpack_nibbles(w_ref),
+                   preferred_element_type=jnp.float32)
+    bm, bn = o_ref.shape
+    o_ref[...] += _stochastic_transfer(
+        part, inv_lsb=inv_lsb, lsb=lsb, levels=levels, sigma=sigma,
+        inl_amp=inl_amp, inl_seed=inl_seed, apply_inl=apply_inl,
+        seed=seed_ref[0, 0], bm=bm, bn=bn)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "levels", "gain", "full_scale",
+                              "sigma", "inl_amp", "inl_seed", "apply_inl",
+                              "bm", "bn", "interpret"))
+def cim_mvm_grouped_noisy(x_codes: jax.Array, w_codes: jax.Array,
+                          seed: jax.Array, *, n_rows: int, levels: int,
+                          gain: float, full_scale: float, sigma: float,
+                          inl_amp: float = 0.0, inl_seed: int = 0,
+                          apply_inl: bool = False, bm: int = 128,
+                          bn: int = 128, interpret: bool = False) -> jax.Array:
+    """Stochastic twin of cim_mvm_grouped. `seed` is a TRACED int32 scalar
+    (no recompile when QAT varies it per step); σ/INL settings are static,
+    sourced from core.adc.stochastic_transfer_params."""
+    m, k = x_codes.shape
+    k2, n = w_codes.shape
+    assert k == k2 and k % n_rows == 0, (x_codes.shape, w_codes.shape, n_rows)
+    groups = k // n_rows
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0, "caller pads M/N to block multiples"
+
+    lsb = full_scale / (gain * (levels - 1))
+    kernel = functools.partial(
+        _cim_mvm_noisy_kernel, inv_lsb=1.0 / lsb, lsb=lsb, levels=levels,
+        sigma=sigma, inl_amp=inl_amp, inl_seed=inl_seed, apply_inl=apply_inl)
+    grid = (m // bm, n // bn, groups)
+    seed2 = jnp.reshape(seed.astype(jnp.int32), (1, 1))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, g: (0, 0)),
+            pl.BlockSpec((bm, n_rows), lambda i, j, g: (i, g)),
+            pl.BlockSpec((n_rows, bn), lambda i, j, g: (g, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(seed2, x_codes.astype(jnp.float32), w_codes.astype(jnp.float32))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "levels", "gain", "full_scale",
+                              "sigma", "inl_amp", "inl_seed", "apply_inl",
+                              "bm", "bn", "interpret"))
+def cim_mvm_grouped_noisy_packed(x_codes: jax.Array, w_packed: jax.Array,
+                                 seed: jax.Array, *, n_rows: int, levels: int,
+                                 gain: float, full_scale: float, sigma: float,
+                                 inl_amp: float = 0.0, inl_seed: int = 0,
+                                 apply_inl: bool = False, bm: int = 128,
+                                 bn: int = 128,
+                                 interpret: bool = False) -> jax.Array:
+    """Packed-weight twin of cim_mvm_grouped_noisy. w_packed [K/2, N] u8."""
+    m, k = x_codes.shape
+    k2, n = w_packed.shape
+    assert k == 2 * k2 and k % n_rows == 0 and n_rows % 2 == 0
+    groups = k // n_rows
+    bm = min(bm, m)
+    bn = min(bn, n)
+    assert m % bm == 0 and n % bn == 0
+
+    lsb = full_scale / (gain * (levels - 1))
+    kernel = functools.partial(
+        _cim_mvm_noisy_packed_kernel, inv_lsb=1.0 / lsb, lsb=lsb,
+        levels=levels, sigma=sigma, inl_amp=inl_amp, inl_seed=inl_seed,
+        apply_inl=apply_inl)
+    grid = (m // bm, n // bn, groups)
+    seed2 = jnp.reshape(seed.astype(jnp.int32), (1, 1))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, g: (0, 0)),
+            pl.BlockSpec((bm, n_rows), lambda i, j, g: (i, g)),
+            pl.BlockSpec((n_rows // 2, bn), lambda i, j, g: (g, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, g: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(seed2, x_codes.astype(jnp.float32), w_packed.astype(jnp.uint8))
 
 
 def _cim_mvm_kernel(x_ref, w_ref, o_ref, *, inv_lsb: float, lsb: float,
@@ -71,12 +295,8 @@ def _cim_mvm_packed_kernel(x_ref, w_ref, o_ref, *, inv_lsb: float, lsb: float,
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    wp = w_ref[...].astype(jnp.int32)                     # [n_rows/2, bn]
-    lo = (wp & 15).astype(jnp.float32)
-    hi = ((wp >> 4) & 15).astype(jnp.float32)
-    half, bn = wp.shape
-    w_full = jnp.stack([lo, hi], axis=1).reshape(2 * half, bn)
-    part = jnp.dot(x_ref[...], w_full, preferred_element_type=jnp.float32)
+    part = jnp.dot(x_ref[...], _unpack_nibbles(w_ref),
+                   preferred_element_type=jnp.float32)
     code = jnp.clip(jnp.round(part * inv_lsb), 0.0, float(levels - 1))
     o_ref[...] += code * lsb
 

@@ -12,9 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.macro import MacroConfig, Scheme
+from repro.core.macro import MacroConfig, Scheme, SimLevel
 
-from .cim_mvm import cim_mvm_grouped, cim_mvm_grouped_packed
+from .cim_mvm import (cim_mvm_grouped, cim_mvm_grouped_noisy,
+                      cim_mvm_grouped_noisy_packed, cim_mvm_grouped_packed)
 
 
 def pack_codes(w_codes: jax.Array) -> jax.Array:
@@ -59,6 +60,50 @@ def packed_col_sums(w_packed: jax.Array) -> jax.Array:
     return jnp.sum((wi & 15) + ((wi >> 4) & 15), axis=-2).astype(jnp.float32)
 
 
+def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _prep_dense(x_codes, w_codes, n_rows: int, bm: int, bn: int):
+    """Shared operand prep for the dense-weight kernels: flatten leading
+    dims, zero-pad K to the macro depth and M/N to block multiples (zero
+    codes are unselected SRAM rows — exact no-ops). Returns
+    (x2, w2, bm_eff, bn_eff, lead, m, n)."""
+    lead = x_codes.shape[:-1]
+    k = x_codes.shape[-1]
+    x2 = x_codes.reshape(-1, k)
+    m, n = x2.shape[0], w_codes.shape[-1]
+    x2 = _pad_to(_pad_to(x2, n_rows, 1), min(bm, max(m, 1)), 0)
+    w2 = _pad_to(_pad_to(w_codes, n_rows, 0), min(bn, max(n, 1)), 1)
+    bm_eff = bm if x2.shape[0] % bm == 0 else x2.shape[0]
+    bn_eff = bn if w2.shape[1] % bn == 0 else w2.shape[1]
+    return x2, w2, bm_eff, bn_eff, lead, m, n
+
+
+def _prep_packed(x_codes, w_packed, n_rows: int, bm: int, bn: int):
+    """Packed-weight twin of _prep_dense: x pads to the byte rows first,
+    w pads in nibble-pair units (zero bytes = two unselected rows)."""
+    lead = x_codes.shape[:-1]
+    k = x_codes.shape[-1]
+    k2 = w_packed.shape[0]
+    assert k in (2 * k2, 2 * k2 - 1), (x_codes.shape, w_packed.shape)
+    x2 = x_codes.reshape(-1, k)
+    m, n = x2.shape[0], w_packed.shape[1]
+    x2 = _pad_to(_pad_to(x2, 2, 1), n_rows, 1)
+    w2 = _pad_to(w_packed, n_rows // 2, 0)
+    x2 = _pad_to(x2, min(bm, max(m, 1)), 0)
+    w2 = _pad_to(w2, min(bn, max(n, 1)), 1)
+    bm_eff = bm if x2.shape[0] % bm == 0 else x2.shape[0]
+    bn_eff = bn if w2.shape[1] % bn == 0 else w2.shape[1]
+    return x2, w2, bm_eff, bn_eff, lead, m, n
+
+
 def cim_mvm_pallas_packed(x_codes: jax.Array, w_packed: jax.Array,
                           cfg: MacroConfig, *, bm: int = 128, bn: int = 128,
                           interpret: bool | None = None) -> jax.Array:
@@ -69,34 +114,13 @@ def cim_mvm_pallas_packed(x_codes: jax.Array, w_packed: jax.Array,
     assert cfg.n_rows % 2 == 0, "nibble packing needs an even macro depth"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    lead = x_codes.shape[:-1]
-    k = x_codes.shape[-1]
-    k2 = w_packed.shape[0]
-    assert k in (2 * k2, 2 * k2 - 1), (x_codes.shape, w_packed.shape)
-    x2 = x_codes.reshape(-1, k)
-    m, n = x2.shape[0], w_packed.shape[1]
-    # pad x to the byte rows, then both operands to the macro depth
-    x2 = _pad_to(_pad_to(x2, 2, 1), cfg.n_rows, 1)
-    w2 = _pad_to(w_packed, cfg.n_rows // 2, 0)
-    x2 = _pad_to(x2, min(bm, max(m, 1)), 0)
-    w2 = _pad_to(w2, min(bn, max(n, 1)), 1)
-    bm_eff = bm if x2.shape[0] % bm == 0 else x2.shape[0]
-    bn_eff = bn if w2.shape[1] % bn == 0 else w2.shape[1]
+    x2, w2, bm_eff, bn_eff, lead, m, n = _prep_packed(x_codes, w_packed,
+                                                      cfg.n_rows, bm, bn)
     out = cim_mvm_grouped_packed(
         x2, w2, n_rows=cfg.n_rows, levels=cfg.effective_adc_levels(),
         gain=cfg.gain, full_scale=cfg.full_scale(), bm=bm_eff, bn=bn_eff,
         interpret=interpret)
     return out[:m, :n].reshape(*lead, n)
-
-
-def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if not pad:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 def cim_mvm_pallas(x_codes: jax.Array, w_codes: jax.Array, cfg: MacroConfig,
@@ -111,21 +135,65 @@ def cim_mvm_pallas(x_codes: jax.Array, w_codes: jax.Array, cfg: MacroConfig,
     assert cfg.scheme == Scheme.BP, "fused kernel implements BP only"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-
-    lead = x_codes.shape[:-1]
-    k = x_codes.shape[-1]
-    x2 = x_codes.reshape(-1, k)
-    m = x2.shape[0]
-    n = w_codes.shape[-1]
-
-    x2 = _pad_to(_pad_to(x2, cfg.n_rows, 1), min(bm, max(m, 1)), 0)
-    w2 = _pad_to(_pad_to(w_codes, cfg.n_rows, 0), min(bn, max(n, 1)), 1)
-    # Block sizes must divide the (padded) dims.
-    bm_eff = bm if x2.shape[0] % bm == 0 else x2.shape[0]
-    bn_eff = bn if w2.shape[1] % bn == 0 else w2.shape[1]
-
+    x2, w2, bm_eff, bn_eff, lead, m, n = _prep_dense(x_codes, w_codes,
+                                                     cfg.n_rows, bm, bn)
     out = cim_mvm_grouped(
         x2, w2, n_rows=cfg.n_rows, levels=cfg.effective_adc_levels(),
         gain=cfg.gain, full_scale=cfg.full_scale(), bm=bm_eff, bn=bn_eff,
         interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def cim_mvm_pallas_noisy(x_codes: jax.Array, w_codes: jax.Array,
+                         cfg: MacroConfig, *, noise_seed, inl_seed: int = 0,
+                         bm: int = 128, bn: int = 128,
+                         interpret: bool | None = None) -> jax.Array:
+    """Stochastic (NOISY/FULL) fused BP MVM: per-conversion thermal noise
+    (and, at FULL, the Fig. 15 INL instance for cfg's inl_seed) drawn inside
+    the kernel in VMEM. `noise_seed` is a traced int32 scalar — vary it per
+    QAT step without recompiling. σ/INL settings come from
+    core.adc.stochastic_transfer_params, the same source adc_quantize uses,
+    so the fused and jnp pipelines agree in distribution."""
+    from repro.core.adc import stochastic_transfer_params
+    assert cfg.scheme == Scheme.BP, "fused kernel implements BP only"
+    assert cfg.sim_level != SimLevel.IDEAL, \
+        "IDEAL transfer runs the deterministic kernel (cim_mvm_pallas)"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    st = stochastic_transfer_params(cfg)
+    x2, w2, bm_eff, bn_eff, lead, m, n = _prep_dense(x_codes, w_codes,
+                                                     cfg.n_rows, bm, bn)
+    out = cim_mvm_grouped_noisy(
+        x2, w2, jnp.asarray(noise_seed, jnp.int32), n_rows=cfg.n_rows,
+        levels=cfg.effective_adc_levels(), gain=cfg.gain,
+        full_scale=cfg.full_scale(), sigma=st["sigma"],
+        inl_amp=st["inl_amp"], inl_seed=inl_seed, apply_inl=st["apply_inl"],
+        bm=bm_eff, bn=bn_eff, interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def cim_mvm_pallas_noisy_packed(x_codes: jax.Array, w_packed: jax.Array,
+                                cfg: MacroConfig, *, noise_seed,
+                                inl_seed: int = 0, bm: int = 128,
+                                bn: int = 128,
+                                interpret: bool | None = None) -> jax.Array:
+    """Stochastic fused BP MVM over nibble-packed weights. Noise draws are a
+    pure function of (seed, output coordinate, group) — independent of the
+    weight container — so this is bit-identical to cim_mvm_pallas_noisy on
+    the unpacked codes under the same seed."""
+    from repro.core.adc import stochastic_transfer_params
+    assert cfg.scheme == Scheme.BP
+    assert cfg.sim_level != SimLevel.IDEAL
+    assert cfg.n_rows % 2 == 0, "nibble packing needs an even macro depth"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    st = stochastic_transfer_params(cfg)
+    x2, w2, bm_eff, bn_eff, lead, m, n = _prep_packed(x_codes, w_packed,
+                                                      cfg.n_rows, bm, bn)
+    out = cim_mvm_grouped_noisy_packed(
+        x2, w2, jnp.asarray(noise_seed, jnp.int32), n_rows=cfg.n_rows,
+        levels=cfg.effective_adc_levels(), gain=cfg.gain,
+        full_scale=cfg.full_scale(), sigma=st["sigma"],
+        inl_amp=st["inl_amp"], inl_seed=inl_seed, apply_inl=st["apply_inl"],
+        bm=bm_eff, bn=bn_eff, interpret=interpret)
     return out[:m, :n].reshape(*lead, n)

@@ -27,6 +27,7 @@ from repro.analysis.roofline import Roofline, model_flops
 from repro.configs.base import SHAPES, TrainConfig
 from repro.configs.registry import ARCHS, cell_is_runnable
 from repro.core.cim_matmul import CIMConfig
+from repro.core.macro import SimLevel
 from repro.launch.mesh import make_production_mesh
 from repro.models import registry
 from repro.parallel import sharding
@@ -115,7 +116,18 @@ def build_cell(arch: str, shape_name: str, mesh, *, cim: str = "off",
                unroll: bool = False, cfg_override=None):
     """Returns (step_fn, abstract_args tuple, cfg, params_abs)."""
     cfg = cfg_override or ARCHS[arch]
-    if cim != "off":
+    if cim == "bp-noisy":
+        # stochastic QAT/eval cell: NOISY converter chain with a fixed
+        # noise_seed → seeded-reproducible draws. Dry-run cells compile on
+        # sharded host meshes where a pallas_call cannot be partitioned, so
+        # (like "bp") the jnp scan backend is pinned here; the fused
+        # stochastic kernel path is exercised single-device by
+        # launch.serve --cim bp-noisy and the engine/CI tests.
+        cfg = cfg.replace(cim=CIMConfig(
+            enabled=True, backend="scan", noise_seed=0,
+            macro=dataclasses.replace(CIMConfig().macro,
+                                      sim_level=SimLevel.NOISY)))
+    elif cim != "off":
         cfg = cfg.replace(cim=CIMConfig(enabled=True, backend="scan"))
     prequant = cim == "bp-prequant"
     if unroll:
@@ -385,11 +397,14 @@ def main():
     ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
     ap.add_argument("--mesh", choices=("single", "multi", "both"),
                     default="single")
-    ap.add_argument("--cim", choices=("off", "bp", "bp-prequant"),
+    ap.add_argument("--cim", choices=("off", "bp", "bp-noisy", "bp-prequant"),
                     default="off",
-                    help="bp = quantize-on-the-fly BP CIM; bp-prequant = "
-                         "serving flow with offline nibble-packed u4 stored "
-                         "codes (1/4 the bf16 weight bytes)")
+                    help="bp = quantize-on-the-fly BP CIM; bp-noisy = same "
+                         "with the NOISY converter chain and noise_seed=0 "
+                         "(seeded-reproducible stochastic cells); "
+                         "bp-prequant = serving flow with offline "
+                         "nibble-packed u4 stored codes (1/4 the bf16 "
+                         "weight bytes)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--analysis", choices=("scan", "extrapolate"),
                     default="scan",

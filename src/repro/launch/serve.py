@@ -25,12 +25,23 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--cim", choices=("off", "bp", "bp-prequant"),
-                    default="off")
+    ap.add_argument("--cim", choices=("off", "bp", "bp-noisy", "bp-prequant"),
+                    default="off",
+                    help="bp-noisy = NOISY converter chain with "
+                         "noise_seed=0; single-device serving, so "
+                         "backend=auto resolves to the fused stochastic "
+                         "Pallas kernel (interpret mode off-TPU)")
     args = ap.parse_args()
 
     cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
-    if args.cim != "off":
+    if args.cim == "bp-noisy":
+        import dataclasses
+        from repro.core.macro import SimLevel
+        cim = CIMConfig(enabled=True, noise_seed=0)
+        cfg = cfg.replace(cim=dataclasses.replace(
+            cim, macro=dataclasses.replace(cim.macro,
+                                           sim_level=SimLevel.NOISY)))
+    elif args.cim != "off":
         cfg = cfg.replace(cim=CIMConfig(enabled=True))
     params = registry.init_params(jax.random.PRNGKey(0), cfg,
                                   max_seq=args.max_len)

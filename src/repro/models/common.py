@@ -94,7 +94,10 @@ def dense(p: Params, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
     if cfg.cim.enabled and (w + "_q") in p:
         # serving path: offline-quantized stored codes — int8 containers or
         # nibble-packed uint8 (1/4 the bf16 HBM bytes); the execution
-        # engine (core.engine) dispatches either format to its backend
+        # engine (core.engine) dispatches either format to its backend.
+        # w_scale is per-matrix or per-channel ([..., 1, M]) transparently;
+        # cfg.cim.noise_seed routes NOISY/FULL evals to the fused
+        # stochastic kernel with seeded-reproducible draws.
         from repro.core.cim_matmul import cim_matmul_prequant
         y = cim_matmul_prequant(x.astype(jnp.float32), p[w + "_q"],
                                 p[w + "_scale"], cfg.cim)

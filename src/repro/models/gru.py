@@ -45,9 +45,11 @@ def init(key, cfg: ModelConfig) -> dict:
 def _mm(p, name: str, x, cfg: ModelConfig, train: bool):
     """Gate/head matmul, CIM-switchable like common.dense: float weights in
     training/eval, offline-quantized stored codes (`<name>_q`, int8 or
-    nibble-packed uint8) when the params were run through
-    models.quantize.quantize_params — the deployed on-chip-residence flow
-    (§V-C: the whole GRU fits in 64 macros' SRAM)."""
+    nibble-packed uint8, with per-matrix or per-channel `<name>_scale`)
+    when the params were run through models.quantize.quantize_params — the
+    deployed on-chip-residence flow (§V-C: the whole GRU fits in 64 macros'
+    SRAM). With cfg.cim.noise_seed set, NOISY/FULL gate MVMs run the fused
+    stochastic kernel — the wake-word robustness study at kernel speed."""
     if cfg.cim.enabled and name + "_q" in p:
         from repro.core.cim_matmul import cim_matmul_prequant
         return cim_matmul_prequant(x, p[name + "_q"], p[name + "_scale"],

@@ -102,8 +102,9 @@ def _expert_weights(p: dict, name: str, cfg: ModelConfig) -> dict:
 def _expert_specs(wp: dict, w_spec) -> dict:
     """shard_map in_specs matching an _expert_weights dict. Stored codes
     shard exactly like the float weight they replace (nibble packing halves
-    the K dim but never splits a byte); per-expert scales ride the expert
-    axis only."""
+    the K dim but never splits a byte); scales ride the expert axis only —
+    both per-expert [E, 1, 1] and per-channel [E, 1, M] shapes (the M axis
+    stays unsharded either way)."""
     if "q" in wp:
         return {"q": w_spec, "s": P("model", None, None)}
     return {"w": w_spec}

@@ -12,6 +12,11 @@ formats, consumed transparently by `core.engine` via `cim_matmul_prequant`:
   packed=False — int8 [..., K, M], one code per byte (half the bf16 bytes);
       kept for A/B benchmarking of the packing win.
 
+Scales follow cfg.cim.weight.per_channel: per-matrix [..., 1, 1] (default)
+or per-output-channel [..., 1, M] — consumers (common.dense, gru._mm,
+moe._expert_weights) pass `w_scale` through untouched and the execution
+engine broadcasts either shape in the dequant epilogue.
+
 Embeddings stay float (a lookup, not an MVM on the macro); norms/biases
 stay float.
 """
