@@ -1,0 +1,174 @@
+"""Per-PR perf trajectory from BENCH_ci.json artifacts → markdown report.
+
+The CI bench-smoke job has been uploading one BENCH_ci.json per run since
+PR 2 (schema pico-ram/kernel_bench/v1); this module turns those point
+measurements into the trajectory the ROADMAP asks for. Two modes:
+
+  one-shot over explicit files (oldest → newest):
+    PYTHONPATH=src python -m repro.analysis.bench_trend \
+        run1/BENCH_ci.json run2/BENCH_ci.json --out TREND.md
+
+  accumulating history (what CI runs — the previous run's history artifact
+  is downloaded when present, the current bench is appended, and both the
+  updated history and the rendered report are re-uploaded):
+    PYTHONPATH=src python -m repro.analysis.bench_trend \
+        --history bench_history.jsonl --append BENCH_ci.json \
+        --label "$GITHUB_SHA" --out TREND.md
+
+Tracked columns (parsed from the bench rows; missing rows render as "—"):
+  * decode tokens/s — the --small packed decode sweep's wall time converted
+    to tokens/second (interpret-mode on CPU CI: a structural trend, not TPU
+    absolute perf — a 10× regression still shows as a 10× regression);
+  * weight-HBM bytes of the packed decode shape and its ×-less-HBM factor
+    vs int8 (the nibble-packing win — exact byte counts, platform-free);
+  * fused-vs-einsum σ ratio of the stochastic kernel's ADC-chain error (the
+    in-kernel PRNG distributional-agreement number the engine tests pin —
+    drift here means a PRNG/transfer regression);
+  * fused stochastic kernel wall µs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+
+def load_bench(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    schema = str(doc.get("schema", ""))
+    if not schema.startswith("pico-ram/kernel_bench/"):
+        raise ValueError(f"{path}: unexpected schema {schema!r}")
+    if not doc.get("rows"):
+        raise ValueError(f"{path}: no bench rows")
+    return doc
+
+
+def extract_metrics(doc: dict) -> dict:
+    """One BENCH_ci.json document → the tracked scalar metrics."""
+    out: dict = {}
+    for r in doc["rows"]:
+        name, us, derived = r["name"], float(r["us"]), str(r.get("derived", ""))
+        m = re.match(r"decode_packed_m(\d+)_k(\d+)_n(\d+)", name)
+        if m and "decode_tok_s" not in out:
+            toks = int(m.group(1))
+            out["decode_shape"] = f"m{m.group(1)}_k{m.group(2)}_n{m.group(3)}"
+            out["decode_tok_s"] = toks / us * 1e6
+            wb = re.search(r"w_bytes\s+(\d+)->(\d+)\s+\(([\d.]+)x", derived)
+            if wb:
+                out["w_bytes_packed"] = int(wb.group(2))
+                out["w_bytes_int8"] = int(wb.group(1))
+                out["hbm_win"] = float(wb.group(3))
+        if name.startswith("kernel_pallas_noisy"):
+            out["noisy_us"] = us
+            sr = re.search(r"ratio=([\d.]+)", derived)
+            if sr:
+                out["sigma_ratio"] = float(sr.group(1))
+        if name.startswith("kernel_ref_jnp"):
+            out["ref_us"] = us
+    return out
+
+
+def entry_from_bench(path: str, label: str | None = None) -> dict:
+    doc = load_bench(path)
+    return {
+        "label": label or os.path.basename(os.path.dirname(path) or path),
+        "jax": doc.get("jax"),
+        "backend": doc.get("backend"),
+        "metrics": extract_metrics(doc),
+    }
+
+
+def load_history(path: str) -> list[dict]:
+    if not os.path.exists(path):
+        return []
+    entries = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                entries.append(json.loads(line))
+    return entries
+
+
+def save_history(path: str, entries: list[dict]) -> None:
+    with open(path, "w") as f:
+        for e in entries:
+            f.write(json.dumps(e) + "\n")
+
+
+def _fmt(v, spec: str = "{:.3f}") -> str:
+    return "—" if v is None else spec.format(v)
+
+
+def render_markdown(entries: list[dict]) -> str:
+    lines = [
+        "# kernel_bench perf trajectory",
+        "",
+        "Interpret-mode CPU CI numbers — structural trend, not TPU absolute "
+        "perf. Byte counts and the σ ratio are platform-free.",
+        "",
+        "| run | decode tok/s | packed weight HBM B | vs int8 | "
+        "fused σ ratio | fused noisy µs |",
+        "|---|---|---|---|---|---|",
+    ]
+    for e in entries:
+        m = e.get("metrics", {})
+        lines.append(
+            "| {} | {} | {} | {} | {} | {} |".format(
+                str(e.get("label", "?"))[:24],
+                _fmt(m.get("decode_tok_s"), "{:.0f}"),
+                _fmt(m.get("w_bytes_packed"), "{:d}"),
+                _fmt(m.get("hbm_win"), "{:.2f}×"),
+                _fmt(m.get("sigma_ratio")),
+                _fmt(m.get("noisy_us"), "{:.1f}"),
+            ))
+    shapes = {e.get("metrics", {}).get("decode_shape") for e in entries}
+    shapes.discard(None)
+    if shapes:
+        lines += ["", f"decode shape(s): {', '.join(sorted(shapes))}"]
+    lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench", nargs="*",
+                    help="BENCH_ci.json files, oldest first (one-shot mode)")
+    ap.add_argument("--history", default=None, metavar="JSONL",
+                    help="accumulating history file (read if present, "
+                         "re-written with --append applied)")
+    ap.add_argument("--append", default=None, metavar="BENCH_JSON",
+                    help="append this bench document to --history")
+    ap.add_argument("--label", default=None,
+                    help="label for the appended entry (e.g. the git sha)")
+    ap.add_argument("--out", default="TREND.md",
+                    help="markdown report path")
+    ap.add_argument("--max-entries", type=int, default=200,
+                    help="keep only the newest N history entries")
+    args = ap.parse_args(argv)
+
+    if bool(args.history) != bool(args.append) and not args.bench:
+        ap.error("--history and --append go together")
+    entries: list[dict] = []
+    if args.history:
+        entries = load_history(args.history)
+        if args.append:
+            entries.append(entry_from_bench(args.append, args.label))
+            entries = entries[-args.max_entries:]
+            save_history(args.history, entries)
+    for path in args.bench:
+        entries.append(entry_from_bench(path))
+    if not entries:
+        ap.error("nothing to render: pass bench files or --history/--append")
+    md = render_markdown(entries)
+    with open(args.out, "w") as f:
+        f.write(md)
+    print(f"wrote {args.out} ({len(entries)} run(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -72,6 +72,22 @@ scale-free, so per-channel dequant is exactly `y_int · s_x · s_w[..., 0, :]`
 its channel scales (`scale` field) so the packed wire format stays
 self-describing.
 
+mesh-native dispatch
+--------------------
+A bare `pallas_call` cannot be GSPMD-partitioned, so when a mesh is active
+(`parallel.sharding.get_mesh()`) every pallas backend routes through
+`parallel.sharding.shard_map`: the contraction axis splits over "data"
+(each shard is its own bank of macros — the paper's Sec. V multi-macro
+tiling), output channels over "model", and the partial MVMs are psum'd
+AFTER the in-kernel ADC transfer + per-shard Eq. 7 correction, so the
+analog semantics per shard match the single-device kernel exactly. The
+stochastic kernels salt their traced seed with the shard's
+`jax.lax.axis_index` (see `kernels.cim_mvm.salt_seed`), so shards draw
+decorrelated converter instances; the salt is 0 on a 1-device mesh, making
+that call bit-identical to the unsharded kernel. Callers already running
+per-shard (inside a repo shard_map, e.g. the MoE expert-parallel region)
+are detected via `sharding.in_shard_context()` and get the plain kernel.
+
 `REPRO_FORCE_JNP=1` in the environment forces `backend="auto"` to resolve
 to the jnp backends only (einsum/scan) — the escape hatch for environments
 where interpret-mode Pallas is unavailable; explicit backend names are
@@ -87,6 +103,9 @@ from typing import Callable, Protocol
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec
+
+from repro.parallel import sharding
 
 from .adc import adc_quantize
 from .macro import MacroConfig, Scheme, SimLevel
@@ -407,10 +426,13 @@ def choose_backend(cfg, x_codes: jax.Array, weights) -> str:
         weights are nibble-packed, else "pallas" (interpret mode executes
         the same kernel body on CPU, keeping tests honest);
       * NOISY/FULL + BP with a noise_seed → the fused stochastic kernel
-        ("pallas_noisy" / "pallas_noisy_packed");
+        ("pallas_noisy" / "pallas_noisy_packed") — on a sharded mesh too:
+        execute_mvm wraps the kernel in shard_map (see _sharded_mvm), so
+        auto no longer needs to demote to scan there;
       * otherwise (no seed, WBS/BS baselines, REPRO_FORCE_JNP=1) → jnp
         backends, scanning the reduction groups once the pre-ADC tensor
-        would exceed ~64 MB.
+        would exceed ~64 MB (the escape hatch is unchanged under a mesh —
+        the bound is on the global pre-ADC tensor).
 
     `cfg` is the layer-level CIMConfig (duck-typed: .backend, .macro and
     optionally .noise_seed).
@@ -430,6 +452,97 @@ def choose_backend(cfg, x_codes: jax.Array, weights) -> str:
     rows = math.prod(x_codes.shape[:-1]) if x_codes.ndim > 1 else 1
     big = rows * groups * m * 4 > _EINSUM_BYTES_CEILING
     return "scan" if (big and macro.scheme == Scheme.BP) else "einsum"
+
+
+# ---------------------------------------------------------------------------
+# mesh-native dispatch: shard_map-wrapped fused kernels
+# ---------------------------------------------------------------------------
+def _under_vmap(*arrays) -> bool:
+    """True when any operand is a vmap batch tracer — shard_map cannot nest
+    under vmap, so the engine falls back to the plain per-call kernel (the
+    pre-mesh behaviour) there."""
+    try:
+        from jax.interpreters.batching import BatchTracer
+    except ImportError:  # pragma: no cover - future jax reorganisations
+        return False
+    return any(isinstance(a, BatchTracer) for a in arrays)
+
+
+def _sharded_mvm(spec: BackendSpec, x_codes, weights, cfg, *, key, inl_seed,
+                 noise_seed, x_zero_point):
+    """One MVM on the active mesh: per-shard fused kernels under shard_map.
+
+    The software mirror of the paper's Sec. V multi-macro tiling: the
+    contraction axis is split over the "data" mesh axis — each shard is its
+    own bank of macros, evaluating the DAC→MAC→ADC transfer (and, for the
+    stochastic backends, drawing ITS OWN converter noise) entirely locally —
+    and the partial MVMs are `psum`'d only AFTER the in-kernel ADC transfer
+    and the per-shard Eq. 7 correction, so per-shard analog semantics are
+    exactly the single-device kernel's. Output channels split over "model",
+    the leading activation dim over the batch axes (see sharding.mvm_plan).
+
+    Seed contract: the traced kernel seed is salted with the shard's linear
+    `jax.lax.axis_index` through `kernels.cim_mvm.salt_seed`, so shards draw
+    decorrelated converter instances (Fig. 18's instance spread, one
+    instance per macro bank). The salt is 0 on a 1-device mesh — that call
+    is bit-identical to the unsharded kernel. Composes with the static
+    inl_seed salt (per-layer/per-step decorrelation) unchanged.
+
+    Returns the GLOBAL Eq. 7-corrected integer output [..., M]; dequant
+    stays in execute_mvm. Every per-shard correction term is a sum over
+    local reduction rows, so the psum over contraction shards rebuilds the
+    full correction; only the o·z·K constant is added once, outside.
+    """
+    from repro.kernels.ops import packed_col_sums, salt_seed
+    macro: MacroConfig = cfg.macro
+    mesh = sharding.get_mesh()
+    packed = isinstance(weights, PackedCodes)
+    stochastic = SimLevel.IDEAL not in spec.sim_levels
+    data = weights.data if packed else weights.astype(jnp.float32)
+    k_logical = weights.k if packed else data.shape[-2]
+    m_cols = data.shape[-1]
+    plan = sharding.mvm_plan(x_codes.shape, k_logical, m_cols,
+                             k_unit=2 if packed else 1)
+    n_ctr = math.prod(mesh.shape[a] for a in plan.ctr_axes) \
+        if plan.ctr_axes else 1
+    k_local = k_logical // n_ctr
+    seed = _resolve_noise_seed(noise_seed, key) if stochastic \
+        else jnp.zeros((), jnp.int32)
+    zp = jnp.asarray(x_zero_point, jnp.float32)
+    w_offset = cfg.weight.offset
+
+    # Only axes that actually partition this MVM may enter the seed salt:
+    # two shards along them hold different coordinates or different macro
+    # groups, so each needs its own PRNG stream. Shards along an UNUSED
+    # mesh axis compute the identical replicated problem — salting those
+    # would make "replicated" outputs differ per device (out_spec lies,
+    # check_vma=False would hide it).
+    salt_axes = tuple(a for a in mesh.axis_names
+                      if a in plan.ctr_axes + plan.row_axes + plan.col_axes)
+
+    def shard_fn(x_l, w_l, zp_l, seed_l):
+        idx = jnp.zeros((), jnp.int32)
+        for a in salt_axes:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a).astype(jnp.int32)
+        weights_l = PackedCodes(w_l, k_local) if packed else w_l
+        seed_shard = salt_seed(seed_l, idx) if stochastic else None
+        y_codes = spec.fn(x_l, weights_l, macro, key=None, inl_seed=inl_seed,
+                          noise_seed=seed_shard)
+        sum_w = packed_col_sums(w_l) if packed else jnp.sum(w_l, axis=-2)
+        y_int = signed_correction(y_codes, x_l, None, w_offset=w_offset,
+                                  x_zero_point=zp_l, sum_w=sum_w, k=0)
+        if plan.ctr_axes:
+            y_int = jax.lax.psum(y_int, plan.ctr_axes)
+        return y_int
+
+    y_int = sharding.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(plan.x_spec(x_codes.ndim), plan.w_spec(),
+                  PartitionSpec(*([None] * zp.ndim)), PartitionSpec()),
+        out_specs=plan.out_spec(x_codes.ndim),
+        check_vma=False,
+    )(x_codes, data, zp, seed)
+    return y_int + w_offset * zp * k_logical
 
 
 # ---------------------------------------------------------------------------
@@ -490,29 +603,46 @@ def execute_mvm(x_codes: jax.Array, weights, cfg, *,
         if s_w is None:
             raise ValueError("execute_mvm needs s_w (or a PackedCodes "
                              "container carrying its scale)")
-    if packed and spec.packed:
-        y_codes = spec.fn(x_codes, weights, macro, key=key, inl_seed=inl_seed,
-                          noise_seed=noise_seed)
-        from repro.kernels.ops import packed_col_sums
-        sum_w = packed_col_sums(weights.data)
-        k = weights.k
+    # normalize the weight container to what the backend consumes
+    if packed and not spec.packed:
+        weights = unpack(weights)
+        packed = False
+    elif not packed and spec.packed:
+        from repro.kernels.ops import pack_codes
+        w_codes = weights.astype(jnp.float32)
+        weights = PackedCodes(pack_codes(w_codes), w_codes.shape[-2])
+        packed = True
+
+    mesh = sharding.get_mesh()
+    if (name.startswith("pallas") and mesh is not None
+            and not sharding.in_shard_context()
+            and not _under_vmap(x_codes,
+                                weights.data if packed else weights)):
+        # mesh-native dispatch: a bare pallas_call cannot be GSPMD-
+        # partitioned, so under an active mesh the fused kernels run
+        # per-shard inside shard_map (correction included — see
+        # _sharded_mvm); already-per-shard callers (e.g. the MoE EP
+        # shard_map) fall through to the plain kernel below.
+        y_int = _sharded_mvm(spec, x_codes, weights, cfg, key=key,
+                             inl_seed=inl_seed, noise_seed=noise_seed,
+                             x_zero_point=x_zero_point)
     else:
-        w_codes = unpack(weights) if packed else weights.astype(jnp.float32)
-        if not packed and spec.packed:
-            from repro.kernels.ops import pack_codes
-            y_codes = spec.fn(x_codes, PackedCodes(pack_codes(w_codes),
-                                                   w_codes.shape[-2]),
-                              macro, key=key, inl_seed=inl_seed,
-                              noise_seed=noise_seed)
+        if packed:
+            y_codes = spec.fn(x_codes, weights, macro, key=key,
+                              inl_seed=inl_seed, noise_seed=noise_seed)
+            from repro.kernels.ops import packed_col_sums
+            sum_w = packed_col_sums(weights.data)
+            k = weights.k
         else:
+            w_codes = weights.astype(jnp.float32)
             y_codes = spec.fn(x_codes, w_codes, macro, key=key,
                               inl_seed=inl_seed, noise_seed=noise_seed)
-        sum_w = jnp.sum(w_codes, axis=-2)
-        k = w_codes.shape[-2]
-
-    y_int = signed_correction(y_codes, x_codes, None,
-                              w_offset=cfg.weight.offset,
-                              x_zero_point=x_zero_point, sum_w=sum_w, k=k)
+            sum_w = jnp.sum(w_codes, axis=-2)
+            k = w_codes.shape[-2]
+        y_int = signed_correction(y_codes, x_codes, None,
+                                  w_offset=cfg.weight.offset,
+                                  x_zero_point=x_zero_point, sum_w=sum_w,
+                                  k=k)
     # Per-channel scales arrive broadcast-shaped against the stored codes
     # ([..., 1, M]); drop the reduction axis so they broadcast against the
     # [..., M] output instead (Eq. 7 is scale-free integer arithmetic, so

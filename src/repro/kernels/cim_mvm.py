@@ -71,6 +71,29 @@ def _mix32(h):
 _GOLDEN32 = 0x9E3779B9  # 2^32/φ — the SplitMix increment
 
 
+def salt_seed(seed, salt):
+    """Fold a decorrelation `salt` into an int32 kernel seed (XOR with the
+    golden-ratio-scrambled salt; salt=0 is the identity).
+
+    One seed names one stochastic converter instance, so any two kernel
+    invocations that must draw independent noise need distinct effective
+    seeds. Two salts exist, both built from this scheme: the STATIC
+    inl_seed (per-layer/per-step decorrelation, applied inside
+    `_stochastic_transfer` at trace time) and the TRACED `jax.lax.axis_index`
+    salt the engine's mesh dispatch applies per shard, so every shard of a
+    sharded MVM models its own macro's converter chain (the Fig. 18
+    instance-to-instance spread, one instance per shard). Works on python
+    ints and traced int32 scalars; integer multiply wraps mod 2^32, matching
+    the in-kernel uint32 arithmetic bit-for-bit.
+    """
+    if isinstance(salt, int):
+        salt &= 0xFFFFFFFF
+        if salt >= 0x80000000:
+            salt -= 0x100000000
+    seed = jnp.asarray(seed, jnp.int32)
+    return seed ^ (jnp.asarray(salt, jnp.int32) * jnp.int32(-1640531527))
+
+
 def _counter_base(seed, rows, cols, group):
     """Per-element uint32 hash state from (seed, global coords, group).
 
@@ -129,8 +152,9 @@ def _stochastic_transfer(part, *, inv_lsb, lsb, levels, sigma, inl_amp,
     # inl_seed salts the counter (statically): one noise_seed names a chip
     # instance, while distinct inl_seed values decorrelate the draws of
     # same-shaped MVMs — the same per-macro-instance knob Fig. 18 uses.
-    salted = seed.astype(jnp.uint32) \
-        ^ jnp.uint32((inl_seed * _GOLDEN32) & 0xFFFFFFFF)
+    # (The engine's mesh dispatch applies the same scheme with a traced
+    # per-shard axis_index salt before the seed reaches this kernel.)
+    salted = salt_seed(seed, inl_seed).astype(jnp.uint32)
     base = _counter_base(salted, rows, cols, pl.program_id(2))
     x = x + jnp.float32(sigma) * _normal12(base)
     code = jnp.clip(jnp.round(x), 0.0, float(levels - 1))

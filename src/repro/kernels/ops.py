@@ -15,7 +15,14 @@ import jax.numpy as jnp
 from repro.core.macro import MacroConfig, Scheme, SimLevel
 
 from .cim_mvm import (cim_mvm_grouped, cim_mvm_grouped_noisy,
-                      cim_mvm_grouped_noisy_packed, cim_mvm_grouped_packed)
+                      cim_mvm_grouped_noisy_packed, cim_mvm_grouped_packed,
+                      salt_seed)
+
+__all__ = [
+    "cim_mvm_pallas", "cim_mvm_pallas_packed", "cim_mvm_pallas_noisy",
+    "cim_mvm_pallas_noisy_packed", "pack_codes", "unpack_codes",
+    "packed_col_sums", "salt_seed",
+]
 
 
 def pack_codes(w_codes: jax.Array) -> jax.Array:

@@ -5,11 +5,21 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
       --shape train_4k --mesh single [--cim bp] [--out experiments/dryrun]
   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  REPRO_DRYRUN_DEVICES=8 PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch qwen2-moe-a2.7b --shape decode_32k --mesh host \
+      --cim bp-prequant --ep a2a       # CI-sized smoke on 8 host devices
+
+--mesh host builds a small data×model mesh over however many host devices
+exist (REPRO_DRYRUN_DEVICES placeholder CPUs) — the CI dryrun-smoke
+configuration exercising the shard_map-wrapped fused kernels and the
+a2a/EP MoE decode cell without 256-chip compile times.
 """
-# The VERY FIRST two lines (before ANY other import, incl. repro.*): jax
-# locks the device count on first init; the dry-run needs 512 placeholders.
+# The VERY FIRST lines (before ANY other import, incl. repro.*): jax locks
+# the device count on first init; the dry-run needs 512 placeholders (or a
+# CI-sized count via REPRO_DRYRUN_DEVICES).
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+_N_DEV = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+os.environ["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={_N_DEV} "
                            + os.environ.get("XLA_FLAGS", ""))
 
 import argparse
@@ -113,22 +123,24 @@ TC_OVERRIDES: dict = {}
 
 
 def build_cell(arch: str, shape_name: str, mesh, *, cim: str = "off",
-               unroll: bool = False, cfg_override=None):
+               unroll: bool = False, cfg_override=None, ep: str | None = None):
     """Returns (step_fn, abstract_args tuple, cfg, params_abs)."""
     cfg = cfg_override or ARCHS[arch]
     if cim == "bp-noisy":
         # stochastic QAT/eval cell: NOISY converter chain with a fixed
-        # noise_seed → seeded-reproducible draws. Dry-run cells compile on
-        # sharded host meshes where a pallas_call cannot be partitioned, so
-        # (like "bp") the jnp scan backend is pinned here; the fused
-        # stochastic kernel path is exercised single-device by
-        # launch.serve --cim bp-noisy and the engine/CI tests.
+        # noise_seed → seeded-reproducible draws. backend="auto" resolves
+        # to the fused stochastic Pallas kernel, which the engine wraps in
+        # shard_map on the sharded dry-run meshes (core.engine._sharded_mvm
+        # — a bare pallas_call cannot be GSPMD-partitioned, which used to
+        # pin the jnp scan backend here).
         cfg = cfg.replace(cim=CIMConfig(
-            enabled=True, backend="scan", noise_seed=0,
+            enabled=True, backend="auto", noise_seed=0,
             macro=dataclasses.replace(CIMConfig().macro,
                                       sim_level=SimLevel.NOISY)))
     elif cim != "off":
         cfg = cfg.replace(cim=CIMConfig(enabled=True, backend="scan"))
+    if ep and cfg.moe:
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, ep_mode=ep))
     prequant = cim == "bp-prequant"
     if unroll:
         # exact FLOPs/bytes for the roofline: XLA cost_analysis counts while
@@ -281,18 +293,35 @@ def extrapolated_costs(arch, shape_name, mesh, *, cim="off",
     return {k: max(v, 0.0) for k, v in total.items()}
 
 
+def _host_mesh():
+    """CI smoke topology over the REPRO_DRYRUN_DEVICES placeholder devices."""
+    from repro.launch.mesh import make_host_smoke_mesh
+    mesh, data, model = make_host_smoke_mesh()
+    return mesh, f"host{data}x{model}"
+
+
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              cim: str = "off", out_dir: str | None = None,
-             analysis: str = "scan", cfg_override=None) -> dict:
+             analysis: str = "scan", cfg_override=None,
+             ep: str | None = None) -> dict:
     shape = SHAPES[shape_name]
     cfg = ARCHS[arch]
     runnable, why = cell_is_runnable(cfg, shape)
-    mesh_name = {"single": "pod16x16", "multi": "pod2x16x16"}[mesh_kind]
+    mesh = None
+    if mesh_kind == "host":
+        mesh, mesh_name = _host_mesh()
+    else:
+        mesh_name = {"single": "pod16x16", "multi": "pod2x16x16"}[mesh_kind]
     cell_id = f"{arch}__{shape_name}__{mesh_name}" + \
         (f"__cim-{cim}" if cim != "off" else "") + \
+        (f"__ep-{ep}" if ep else "") + \
         ("__xp" if analysis == "extrapolate" else "")
     result: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
                     "cim": cim, "cell": cell_id}
+    if ep:
+        result["ep"] = ep
+        if runnable and not cfg.moe:
+            runnable, why = False, f"--ep {ep} needs a MoE arch"
     if runnable and cim == "bp-prequant" and shape.kind == "train":
         runnable, why = False, \
             "bp-prequant is a serving flow (stored codes are not trainable)"
@@ -302,13 +331,15 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         _dump(result, out_dir, cell_id)
         return result
 
-    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     sharding.set_mesh(mesh)
     try:
         t0 = time.monotonic()
         fn, args, cfg2, params_abs = build_cell(arch, shape_name, mesh,
                                                 cim=cim,
-                                                cfg_override=cfg_override)
+                                                cfg_override=cfg_override,
+                                                ep=ep)
         with mesh:
             lowered = fn.lower(*args)
             t_lower = time.monotonic() - t0
@@ -395,16 +426,25 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
     ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
-    ap.add_argument("--mesh", choices=("single", "multi", "both"),
-                    default="single")
+    ap.add_argument("--mesh", choices=("single", "multi", "both", "host"),
+                    default="single",
+                    help="single/multi = the production 256/512-chip "
+                         "meshes; host = a small data×model mesh over the "
+                         "available host devices (REPRO_DRYRUN_DEVICES) — "
+                         "the CI smoke topology")
     ap.add_argument("--cim", choices=("off", "bp", "bp-noisy", "bp-prequant"),
                     default="off",
                     help="bp = quantize-on-the-fly BP CIM; bp-noisy = same "
                          "with the NOISY converter chain and noise_seed=0 "
-                         "(seeded-reproducible stochastic cells); "
+                         "(seeded-reproducible stochastic cells on the "
+                         "shard_map-wrapped fused Pallas backend); "
                          "bp-prequant = serving flow with offline "
                          "nibble-packed u4 stored codes (1/4 the bf16 "
                          "weight bytes)")
+    ap.add_argument("--ep", choices=("psum", "a2a"), default=None,
+                    help="override MoEConfig.ep_mode for MoE archs: a2a = "
+                         "all-to-all token-dispatch expert parallelism "
+                         "(decode steps use the chunked a2a variant)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--analysis", choices=("scan", "extrapolate"),
                     default="scan",
@@ -424,7 +464,7 @@ def main():
 
     for a, s, m in cells:
         r = run_cell(a, s, m, cim=args.cim, out_dir=args.out,
-                     analysis=args.analysis)
+                     analysis=args.analysis, ep=args.ep)
         status = r["status"]
         extra = ""
         if status == "ok":

@@ -34,3 +34,15 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (host) devices exist — tests."""
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_host_smoke_mesh():
+    """data×model mesh over ALL available host devices — the CI smoke
+    topology shared by `launch.dryrun --mesh host` and `launch.serve
+    --mesh host` (REPRO_DRYRUN_DEVICES / REPRO_SERVE_DEVICES set the
+    placeholder device count before first jax init). Returns
+    (mesh, data, model): model is the largest of 4/2/1 dividing the device
+    count, so EP/TP shards exist whenever more than one device does."""
+    n = jax.device_count()
+    model = next(m for m in (4, 2, 1) if n % m == 0)
+    return make_host_mesh(n // model, model), n // model, model

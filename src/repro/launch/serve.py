@@ -2,10 +2,25 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --requests 8 --slots 4 --max-new 16 [--cim bp]
+
+  REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
+      --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host
+      # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
+      # kernels end-to-end on a small host mesh
 """
 from __future__ import annotations
 
+# Before ANY jax import: jax locks the device count at first init, so the
+# optional multi-host-device serving mesh needs the flag set here.
+import os
+if os.environ.get("REPRO_SERVE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        f"{os.environ['REPRO_SERVE_DEVICES']} "
+        + os.environ.get("XLA_FLAGS", ""))
+
 import argparse
+import contextlib
 import time
 
 import jax
@@ -14,6 +29,7 @@ import numpy as np
 from repro.configs.registry import ARCHS, SMOKES
 from repro.core.cim_matmul import CIMConfig
 from repro.models import registry
+from repro.parallel import sharding
 from repro.runtime.server import Request, Server
 
 
@@ -28,10 +44,26 @@ def main():
     ap.add_argument("--cim", choices=("off", "bp", "bp-noisy", "bp-prequant"),
                     default="off",
                     help="bp-noisy = NOISY converter chain with "
-                         "noise_seed=0; single-device serving, so "
-                         "backend=auto resolves to the fused stochastic "
-                         "Pallas kernel (interpret mode off-TPU)")
+                         "noise_seed=0; backend=auto resolves to the fused "
+                         "stochastic Pallas kernel (interpret mode off-TPU) "
+                         "— on a mesh (--mesh host) the engine wraps it in "
+                         "shard_map, so sharded serving no longer falls "
+                         "back to the jnp scan backend")
+    ap.add_argument("--mesh", choices=("none", "host"), default="none",
+                    help="host = shard serving over a data×model mesh of "
+                         "the available host devices (set "
+                         "REPRO_SERVE_DEVICES=N for N placeholder CPU "
+                         "devices) — executes the mesh-sharded CIM engine "
+                         "end-to-end")
     args = ap.parse_args()
+
+    mesh_ctx = contextlib.nullcontext()
+    if args.mesh == "host":
+        from repro.launch.mesh import make_host_smoke_mesh
+        mesh, data, model = make_host_smoke_mesh()
+        sharding.set_mesh(mesh)
+        mesh_ctx = mesh
+        print(f"serving on host mesh data={data} model={model}")
 
     cfg = (SMOKES if args.smoke else ARCHS)[args.arch]
     if args.cim == "bp-noisy":
@@ -50,15 +82,15 @@ def main():
 
     rng = np.random.RandomState(0)
     reqs = []
-    for i in range(args.requests):
-        plen = int(rng.randint(4, 17))
-        prompt = rng.randint(0, cfg.vocab, size=plen).tolist()
-        r = Request(prompt=prompt, max_new_tokens=args.max_new)
-        server.submit(r)
-        reqs.append(r)
-
     t0 = time.monotonic()
-    server.run_until_drained()
+    with mesh_ctx:
+        for i in range(args.requests):
+            plen = int(rng.randint(4, 17))
+            prompt = rng.randint(0, cfg.vocab, size=plen).tolist()
+            r = Request(prompt=prompt, max_new_tokens=args.max_new)
+            server.submit(r)
+            reqs.append(r)
+        server.run_until_drained()
     dt = time.monotonic() - t0
     total_new = sum(len(r.output) for r in reqs)
     for r in reqs:

@@ -8,10 +8,22 @@ Production layout (1000+ chip posture):
   * baseline EP combine: each model rank computes its local experts' tokens
     and the outputs are psum'd over "model" ("replicated-dispatch EP") —
     simple and correct for every T including single-token decode;
-  * optimized EP (ep_mode="a2a", §Perf): sequence-sharded dispatch with
-    static-capacity all_to_all (DeepSeek-style), cutting collective bytes.
+  * optimized EP (ep_mode="a2a", §Perf): all-to-all token dispatch with
+    static capacity (DeepSeek-style), via parallel.collectives.a2a_dispatch
+    / a2a_combine. Two layouts share one dispatch core: prefill/train
+    shards the sequence over "model" (t % ep == 0); decode (t too short to
+    seq-shard — the single-token step) splits the data-shard's tokens into
+    ep chunks, each model rank dispatching its own chunk and an all_gather
+    reassembling the outputs — only routed tokens (top_k/E of the bytes)
+    cross the EP axis either way.
   * shared experts (qwen2 / deepseek) run as a dense TP FFN outside the
     EP region (they process every token — no routing needed).
+
+Routed expert weights may be offline-quantized (models.quantize): int8
+containers or the nibble-packed serving format, which rides through the EP
+shard_map as an `engine.PackedCodes` container (a registered pytree, so
+expert shard specs apply to its code bytes and carried per-expert scales
+leaf-wise) — 4-bit expert weights at rest under expert parallelism.
 
 Experts are padded to a multiple of the model-axis size (qwen2's 60 → 64);
 pad experts receive no tokens (router logits exist only for real experts).
@@ -28,7 +40,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.cim_matmul import cim_matmul, cim_matmul_ste
-from repro.parallel import sharding
+from repro.core.engine import PackedCodes
+from repro.parallel import collectives, sharding
 from repro.parallel.sharding import constrain
 
 from . import common
@@ -88,15 +101,28 @@ def _positions_in_expert(ids_flat: jax.Array, e_pad: int):
 
 
 def _expert_weights(p: dict, name: str, cfg: ModelConfig) -> dict:
-    """One routed-expert weight as a small dict: {"w": float [E, K, M]} or,
-    after models.quantize.quantize_params, {"q": stored codes (int8 or
-    nibble-packed uint8), "s": per-expert scales [E, 1, 1]} — the serving
-    format the execution engine consumes directly. Stored codes are only
-    meaningful on the macro, so (like common.dense and gru._mm) they are
-    picked up only when cfg.cim.enabled."""
+    """One routed-expert weight as a small dict: {"w": float [E, K, M]};
+    after models.quantize.quantize_params either {"q": int8 stored codes,
+    "s": per-expert scales [E, 1, 1]} or — for the nibble-packed serving
+    format — {"pk": engine.PackedCodes} carrying the uint8 code bytes
+    [E, ceil(K/2), M] AND the scales in one self-describing container the
+    execution engine consumes directly. Stored codes are only meaningful on
+    the macro, so (like common.dense and gru._mm) they are picked up only
+    when cfg.cim.enabled."""
     if cfg.cim.enabled and name + "_q" in p:
-        return {"q": p[name + "_q"], "s": p[name + "_scale"]}
+        q, s = p[name + "_q"], p[name + "_scale"]
+        if q.dtype == jnp.uint8:   # nibble-packed: two u4 codes per byte
+            k = cfg.d_model if name in ("e_gate", "e_up") \
+                else cfg.moe.d_ff_expert
+            return {"pk": PackedCodes(q, k, s)}
+        return {"q": q, "s": s}
     return {"w": p[name]}
+
+
+def _e_local(wp: dict) -> int:
+    """Local (per-shard) expert count of an _expert_weights dict."""
+    v = next(iter(wp.values()))
+    return (v.data if isinstance(v, PackedCodes) else v).shape[0]
 
 
 def _expert_specs(wp: dict, w_spec) -> dict:
@@ -104,14 +130,23 @@ def _expert_specs(wp: dict, w_spec) -> dict:
     shard exactly like the float weight they replace (nibble packing halves
     the K dim but never splits a byte); scales ride the expert axis only —
     both per-expert [E, 1, 1] and per-channel [E, 1, M] shapes (the M axis
-    stays unsharded either way)."""
+    stays unsharded either way). PackedCodes is a pytree, so its spec is a
+    like-structured container: w_spec for the code bytes, expert-axis-only
+    for the carried scales."""
+    s_spec = P("model", None, None)
+    if "pk" in wp:
+        return {"pk": PackedCodes(w_spec, wp["pk"].k, s_spec)}
     if "q" in wp:
-        return {"q": w_spec, "s": P("model", None, None)}
+        return {"q": w_spec, "s": s_spec}
     return {"w": w_spec}
 
 
 def _gather_expert(wp: dict, axis: int) -> dict:
     """FSDP all-gather of an expert weight's sharded K/M dim (ZeRO-3)."""
+    if "pk" in wp:
+        pk = wp["pk"]
+        data = jax.lax.all_gather(pk.data, "data", axis=axis, tiled=True)
+        return {"pk": PackedCodes(data, pk.k, pk.scale)}
     key = "q" if "q" in wp else "w"
     return {**wp, key: jax.lax.all_gather(wp[key], "data", axis=axis,
                                           tiled=True)}
@@ -125,6 +160,10 @@ def _expert_ffn(buf: jax.Array, wg, wu, wd, cfg: ModelConfig, train: bool):
     quantize-on-the-fly float weights)."""
     if cfg.cim.enabled:
         def one(xb, wp):
+            if "pk" in wp:   # nibble-packed container (carries its scales)
+                from repro.core.cim_matmul import cim_matmul_prequant
+                return cim_matmul_prequant(xb.astype(jnp.float32), wp["pk"],
+                                           None, cfg.cim)
             if "q" in wp:
                 from repro.core.cim_matmul import cim_matmul_prequant
                 return cim_matmul_prequant(xb.astype(jnp.float32), wp["q"],
@@ -150,7 +189,7 @@ def _local_moe(x2, router_w, wg, wu, wd, cfg: ModelConfig, *, train: bool,
     Returns (y2 [T, D], aux_loss).
     """
     t, d = x2.shape
-    e_local = next(iter(wg.values())).shape[0]
+    e_local = _e_local(wg)
     e_pad = padded_experts(cfg.moe.n_experts)
     k = cfg.moe.top_k
 
@@ -209,8 +248,7 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
     # --- expert-parallel shard_map --------------------------------------
     batch_axes = sharding.resolve("batch") or ()
     b_local = b // math.prod(mesh.shape[a] for a in batch_axes) if batch_axes else b
-    ep = mesh.shape["model"]
-    if cfg.moe.ep_mode == "a2a" and t % ep == 0:
+    if cfg.moe.ep_mode == "a2a":
         y2, aux = _a2a_moe(p, x, cfg, mesh, batch_axes, b_local, train)
         return y_shared + y2.astype(x.dtype), aux
     cap = _capacity(b_local * t, cfg)
@@ -220,7 +258,7 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
 
     def shard_fn(x_l, router_w, wg_l, wu_l, wd_l):
         rank = jax.lax.axis_index("model")
-        e_local = next(iter(wg_l.values())).shape[0]
+        e_local = _e_local(wg_l)
         # FSDP all-gather of the local experts' D-shards (ZeRO-3 on use).
         if fsdp:
             wg_l = _gather_expert(wg_l, 1)
@@ -250,27 +288,115 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
     return y_shared + y2.astype(x.dtype), aux
 
 
+def _a2a_capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    """Per-expert capacity per SOURCE shard (static dispatch buffers)."""
+    e_pad = padded_experts(cfg.moe.n_experts)
+    c = int(math.ceil(n_tokens * cfg.moe.top_k * cfg.moe.capacity_factor
+                      / e_pad))
+    return max(8, -(-c // 8) * 8)
+
+
+def _a2a_core(x2: jax.Array, router_w, wg, wu, wd, cfg: ModelConfig, *,
+              cap: int, train: bool, valid: jax.Array | None = None):
+    """Shared a2a-EP dispatch core: runs INSIDE a shard_map over "model".
+
+    Routes the rank's own tokens x2 [T_rank, D], packs them into the
+    static-capacity slot layout, exchanges via collectives.a2a_dispatch,
+    runs the local experts, and combines through collectives.a2a_combine.
+    `valid` masks padding rows (decode chunking): invalid tokens neither
+    consume capacity nor contribute output or router statistics.
+
+    Returns (y2 [T_rank, D], me_sum [E], pe_sum [E], n_valid) with the
+    UN-normalized router load stats so the caller can psum them over
+    "model" for an exact global load-balance loss.
+    """
+    tloc, dl = x2.shape
+    e_pad = padded_experts(cfg.moe.n_experts)
+    k = cfg.moe.top_k
+
+    probs, ids, weights = _route(x2, router_w, k)
+    ids_flat = ids.reshape(-1)
+    if valid is not None:
+        # invalid (padding) rows route to the out-of-range sentinel BEFORE
+        # the capacity cumsum, so they never occupy a slot a valid token
+        # needs (one_hot of e_pad is the zero row)
+        valid_flat = jnp.repeat(valid, k)
+        ids_flat = jnp.where(valid_flat, ids_flat, e_pad)
+        weights = weights * valid[:, None].astype(weights.dtype)
+    pos = _positions_in_expert(ids_flat, e_pad)
+    keep = pos < cap
+    if valid is not None:
+        keep = keep & valid_flat
+    slot = jnp.where(keep, ids_flat * cap + pos, e_pad * cap)
+    token_idx = jnp.repeat(jnp.arange(tloc), k)
+    send = jnp.zeros((e_pad * cap + 1, dl), x2.dtype)
+    send = send.at[slot].set(x2[token_idx])
+    send = send[:-1].reshape(e_pad, cap, dl)
+    recv = collectives.a2a_dispatch(send, "model")
+    out = _expert_ffn(recv, wg, wu, wd, cfg, train)  # [e_local, ep·cap, D]
+    back = collectives.a2a_combine(out, "model")     # original slot layout
+    back = back.reshape(e_pad * cap, dl)
+    back = jnp.concatenate([back, jnp.zeros((1, dl), back.dtype)], 0)
+    y_choices = back[slot] * weights.reshape(-1)[:, None].astype(back.dtype)
+    y2 = jnp.zeros((tloc, dl), back.dtype).at[token_idx].add(y_choices)
+
+    onehot = jax.nn.one_hot(ids_flat, cfg.moe.n_experts, dtype=jnp.float32)
+    if valid is not None:
+        onehot = onehot * jnp.repeat(valid, k).astype(jnp.float32)[:, None]
+        pe_sum = jnp.sum(probs * valid[:, None].astype(jnp.float32), axis=0)
+        n_valid = jnp.sum(valid.astype(jnp.float32))
+    else:
+        pe_sum = jnp.sum(probs, axis=0)
+        n_valid = jnp.float32(tloc)
+    return y2, jnp.sum(onehot, axis=0), pe_sum, n_valid
+
+
+def _a2a_aux(me_sum, pe_sum, n_valid, cfg: ModelConfig, mesh):
+    """Exact load-balance loss over the "model" token split; averaged
+    (GShard-estimator-style) over the remaining mesh axes so the P()
+    out_spec sees a replicated value."""
+    me_sum = jax.lax.psum(me_sum, "model")
+    pe_sum = jax.lax.psum(pe_sum, "model")
+    n = jax.lax.psum(n_valid, "model")
+    me = me_sum / jnp.maximum(n * cfg.moe.top_k, 1.0)
+    pe = pe_sum / jnp.maximum(n, 1.0)
+    aux = cfg.moe.n_experts * jnp.sum(me * pe)
+    other = tuple(a for a in mesh.axis_names if a != "model")
+    return jax.lax.pmean(aux, other) if other else aux
+
+
 def _a2a_moe(p: dict, x: jax.Array, cfg: ModelConfig, mesh, batch_axes,
              b_local: int, train: bool):
-    """Sequence-sharded dispatch EP (DeepSeek-style), §Perf optimization.
+    """All-to-all dispatch EP (DeepSeek-style), §Perf optimization.
 
-    Tokens are sharded over BOTH batch axes and "model" (sequence split), so
-    per-device dispatch buffers shrink by the model-axis size vs psum-EP and
-    the psum of the full activation is replaced by a pair of static-capacity
-    all_to_alls that move only routed tokens (top_k/E of the traffic).
+    Prefill/train (t divisible by the model-axis size): tokens shard over
+    BOTH batch axes and "model" (sequence split), so per-device dispatch
+    buffers shrink by the model-axis size vs psum-EP and the psum of the
+    full activation is replaced by the static-capacity all_to_all pair that
+    moves only routed tokens (top_k/E of the traffic).
+
+    Decode (t too short to seq-shard — the single-token step): tokens stay
+    replicated over "model"; each model rank takes an ep-th CHUNK of the
+    data-shard's tokens (zero-padded, masked), dispatches only that chunk
+    through the same a2a core, and one all_gather over "model" reassembles
+    the outputs — routed-token a2a traffic plus a 1/ep-sized gather instead
+    of a full-activation psum.
     """
     b, t, d = x.shape
     ep = mesh.shape["model"]
-    t_local = t // ep
-    e_pad = padded_experts(cfg.moe.n_experts)
-    e_local = e_pad // ep
-    k = cfg.moe.top_k
-    # per-expert capacity per SOURCE shard
-    cap = max(8, -(-int(math.ceil(b_local * t_local * k
-                                  * cfg.moe.capacity_factor / e_pad)) // 8) * 8)
+    seq_sharded = t % ep == 0
 
     fsdp = sharding.resolve("fsdp") is not None \
         and "data" in mesh.axis_names and mesh.shape["data"] > 1
+
+    if seq_sharded:
+        cap = _a2a_capacity(b_local * (t // ep), cfg)
+        x_spec = P(batch_axes if batch_axes else None, "model", None)
+    else:
+        tloc = b_local * t
+        chunk = -(-tloc // ep)
+        cap = _a2a_capacity(chunk, cfg)
+        x_spec = P(batch_axes if batch_axes else None, None, None)
 
     def shard_fn(x_l, router_w, wg, wu, wd):
         if fsdp:
@@ -279,40 +405,25 @@ def _a2a_moe(p: dict, x: jax.Array, cfg: ModelConfig, mesh, batch_axes,
             wd = _gather_expert(wd, 2)
         bl, tl, dl = x_l.shape
         x2 = x_l.reshape(bl * tl, dl)
-        tloc = x2.shape[0]
-
-        probs, ids, weights = _route(x2, router_w, k)
-        ids_flat = ids.reshape(-1)
-        pos = _positions_in_expert(ids_flat, e_pad)
-        keep = pos < cap
-        slot = jnp.where(keep, ids_flat * cap + pos, e_pad * cap)
-        token_idx = jnp.repeat(jnp.arange(tloc), k)
-        send = jnp.zeros((e_pad * cap + 1, dl), x2.dtype)
-        send = send.at[slot].set(x2[token_idx])
-        send = send[:-1].reshape(e_pad, cap, dl)
-        # exchange: peer r receives its e_local experts' slots from every
-        # source, concatenated source-major along the capacity axis
-        recv = jax.lax.all_to_all(send, "model", split_axis=0,
-                                  concat_axis=1, tiled=True)
-        out = _expert_ffn(recv, wg, wu, wd, cfg, train)  # [e_local, ep·cap, D]
-        # return: split the source-concat axis, concat expert blocks back —
-        # lands exactly in this shard's original [E_pad, cap] slot layout
-        back = jax.lax.all_to_all(out, "model", split_axis=1,
-                                  concat_axis=0, tiled=True)
-        back = back.reshape(e_pad * cap, dl)
-        back = jnp.concatenate([back, jnp.zeros((1, dl), back.dtype)], 0)
-        y_choices = back[slot] * weights.reshape(-1)[:, None].astype(back.dtype)
-        y2 = jnp.zeros((tloc, dl), back.dtype).at[token_idx].add(y_choices)
-
-        me = jnp.mean(jax.nn.one_hot(ids_flat, cfg.moe.n_experts,
-                                     dtype=jnp.float32), axis=0)
-        pe = jnp.mean(probs, axis=0)
-        aux = cfg.moe.n_experts * jnp.sum(me * pe)
-        aux = jax.lax.pmean(aux, tuple(mesh.axis_names))
+        if seq_sharded:
+            y2, me_sum, pe_sum, n_valid = _a2a_core(
+                x2, router_w, wg, wu, wd, cfg, cap=cap, train=train)
+        else:
+            tloc = x2.shape[0]
+            chunk = -(-tloc // ep)
+            x2p = jnp.pad(x2, ((0, ep * chunk - tloc), (0, 0)))
+            rank = jax.lax.axis_index("model")
+            mine = jax.lax.dynamic_slice_in_dim(x2p, rank * chunk, chunk, 0)
+            valid = rank * chunk + jnp.arange(chunk) < tloc
+            y_mine, me_sum, pe_sum, n_valid = _a2a_core(
+                mine, router_w, wg, wu, wd, cfg, cap=cap, train=train,
+                valid=valid)
+            y2 = jax.lax.all_gather(y_mine, "model", axis=0,
+                                    tiled=True)[:tloc]
+        aux = _a2a_aux(me_sum, pe_sum, n_valid, cfg, mesh)
         return y2.reshape(bl, tl, dl), aux
 
     dax = "data" if fsdp else None
-    x_spec = P(batch_axes if batch_axes else None, "model", None)
     wg = _expert_weights(p, "e_gate", cfg)
     wu = _expert_weights(p, "e_up", cfg)
     wd = _expert_weights(p, "e_down", cfg)

@@ -1,16 +1,49 @@
 """Distributed-optimization collectives: gradient compression with error
-feedback, and helpers shared by shard_map code.
+feedback, expert-parallel all-to-all token exchange, and helpers shared by
+shard_map code.
 
 int8 gradient all-reduce (1-bit-Adam-family trick, 4× wire reduction vs f32):
 each participant quantizes its local gradient to int8 with a per-tensor
 scale, the psum runs on int32 (exact), and the unrepresented residue is
 carried into the next step's gradient (error feedback) so the compression
 bias does not accumulate — the property tests/test_collectives.py checks.
+
+a2a_dispatch / a2a_combine are the static-capacity expert-parallel token
+exchange (DeepSeek-style EP): every source rank packs its routed tokens
+into per-expert capacity slots and the pair of all_to_alls moves ONLY those
+slots — top_k/E of the bytes a psum-combine would move. Both run inside
+shard_map over the expert mesh axis; the slot layouts they assume are
+documented on the functions and owned by models/moe.py.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def a2a_dispatch(send: jax.Array, axis_name: str) -> jax.Array:
+    """EP dispatch: route capacity-slotted tokens to their expert's rank.
+
+    send [E_pad, cap, D] per source rank (slot (e, c) = c-th token this
+    source routed to global expert e). Returns [E_local, ep·cap, D] per
+    expert rank: its E_local experts' slots from every source,
+    source-major along the capacity axis — recv[e, s·cap + c] is source
+    s's slot (rank·E_local + e, c).
+    """
+    return jax.lax.all_to_all(send, axis_name, split_axis=0, concat_axis=1,
+                              tiled=True)
+
+
+def a2a_combine(out: jax.Array, axis_name: str) -> jax.Array:
+    """Inverse exchange of a2a_dispatch for the expert outputs.
+
+    out [E_local, ep·cap, D] per expert rank (same layout a2a_dispatch
+    delivered). Returns [E_pad, cap, D] per source rank — every token lands
+    back in exactly the slot its source packed it into, so the combine
+    scatter is collective-free local indexing.
+    """
+    return jax.lax.all_to_all(out, axis_name, split_axis=1, concat_axis=0,
+                              tiled=True)
 
 
 def quantize_int8(x: jax.Array):

@@ -24,6 +24,8 @@ tests (set_mesh(None) → every helper is a no-op).
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import math
 from typing import Optional, Sequence
 
@@ -34,19 +36,45 @@ _MESH: Optional[Mesh] = None
 _FSDP: bool = True
 
 
+# Depth of shard_map bodies currently being traced. shard_map regions must
+# not nest, and the CIM engine's mesh dispatch must know when a layer matmul
+# is already executing per-shard (e.g. inside the MoE expert-parallel
+# shard_map) so it runs the plain kernel instead of wrapping a second
+# shard_map around it. Every repo shard_map call site goes through the
+# wrapper below, which brackets the body trace — a plain counter is enough
+# because tracing is single-threaded per jit trace.
+_SHARD_DEPTH: list[int] = [0]
+
+
+def in_shard_context() -> bool:
+    """True while a shard_map body (opened via this module) is tracing —
+    i.e. the current code already runs per-shard."""
+    return _SHARD_DEPTH[0] > 0
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
     """jax.shard_map across jax versions.
 
     Newer jax exposes it at the top level with a `check_vma` flag; 0.4.x
     has jax.experimental.shard_map.shard_map with the same semantics under
-    `check_rep`. All repo call sites go through this wrapper.
+    `check_rep`. All repo call sites go through this wrapper, which also
+    marks the body trace so `in_shard_context()` reports per-shard
+    execution (the CIM engine's nesting guard).
     """
+    @functools.wraps(f)
+    def body(*args, **kwargs):
+        _SHARD_DEPTH[0] += 1
+        try:
+            return f(*args, **kwargs)
+        finally:
+            _SHARD_DEPTH[0] -= 1
+
     native = getattr(jax, "shard_map", None)
     if native is not None:
-        return native(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      check_vma=check_vma)
+        return native(body, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_vma=check_vma)
     from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    return _sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                check_rep=check_vma)
 
 
@@ -212,6 +240,79 @@ def tree_param_specs(params) -> dict:
     treedef = jax.tree_util.tree_structure(params)
     return jax.tree_util.tree_unflatten(
         treedef, [one(kp, leaf) for kp, leaf in flat])
+
+
+# ---------------------------------------------------------------------------
+# Mesh partition plan for one sharded MVM (the CIM engine's fused dispatch).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class MVMPlan:
+    """How one x[..., K] @ w[K, M] MVM maps onto the active mesh.
+
+    ctr_axes shard the contraction (K) — the multi-macro tiling of the
+    paper's Sec. V: each shard evaluates its own macro groups and the
+    partial MVMs are psum'd AFTER the per-shard ADC transfer + Eq. 7
+    correction. row_axes shard the leading activation dim, col_axes the
+    output-channel (M) dim; empty tuples mean replicated.
+    """
+
+    ctr_axes: tuple = ()
+    row_axes: tuple = ()
+    col_axes: tuple = ()
+
+    def x_spec(self, ndim: int) -> PartitionSpec:
+        lead = [None] * (ndim - 1)
+        if self.row_axes and ndim > 1:
+            lead[0] = self.row_axes if len(self.row_axes) > 1 \
+                else self.row_axes[0]
+        return PartitionSpec(*lead, _ent(self.ctr_axes))
+
+    def w_spec(self) -> PartitionSpec:
+        return PartitionSpec(_ent(self.ctr_axes), _ent(self.col_axes))
+
+    def out_spec(self, ndim: int) -> PartitionSpec:
+        lead = [None] * (ndim - 1)
+        if self.row_axes and ndim > 1:
+            lead[0] = self.row_axes if len(self.row_axes) > 1 \
+                else self.row_axes[0]
+        return PartitionSpec(*lead, _ent(self.col_axes))
+
+
+def _ent(axes: tuple):
+    return None if not axes else (axes if len(axes) > 1 else axes[0])
+
+
+def mvm_plan(x_shape: Sequence[int], k: int, m: int, *,
+             k_unit: int = 1) -> MVMPlan:
+    """Partition plan for one MVM on the active mesh (identity w/o a mesh).
+
+    Policy: the contraction goes over "data" when K divides (in units of
+    `k_unit` rows — 2 for nibble-packed weights so no byte is split across
+    shards); the output channels go over "model" when M divides; the leading
+    activation dim goes over "pod" (and over "data" too when the contraction
+    left it free). Non-divisible dims stay replicated — the same silent
+    fallback spec_for applies to parameters.
+    """
+    if _MESH is None:
+        return MVMPlan()
+    names = _MESH.axis_names
+    ctr: tuple = ()
+    if "data" in names:
+        size = _MESH.shape["data"]
+        if size > 1 and k % (size * k_unit) == 0:
+            ctr = ("data",)
+    col: tuple = ()
+    if "model" in names and m % _MESH.shape["model"] == 0:
+        col = ("model",)
+    row: tuple = ()
+    if len(x_shape) > 1:
+        lead = x_shape[0]
+        for ax in ("pod",) + (("data",) if not ctr else ()):
+            if ax in names and lead % (_MESH.shape[ax]
+                                       * math.prod(_MESH.shape[a]
+                                                   for a in row)) == 0:
+                row = row + (ax,)
+    return MVMPlan(ctr_axes=ctr, row_axes=row, col_axes=col)
 
 
 def tree_shardings(params):

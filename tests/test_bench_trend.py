@@ -1,0 +1,80 @@
+"""analysis.bench_trend: BENCH_ci.json ingestion, history accumulation and
+the rendered markdown perf-trajectory table (the bench-smoke CI artifact)."""
+import json
+
+import pytest
+
+from repro.analysis import bench_trend
+
+
+def _doc(us_decode=400.0, ratio=1.02):
+    return {
+        "schema": "pico-ram/kernel_bench/v1",
+        "jax": "0.4.37",
+        "backend": "cpu",
+        "rows": [
+            {"name": "kernel_ref_jnp_576x64", "us": 120.0, "derived": "oracle"},
+            {"name": "kernel_pallas_noisy_m32_k288_n64", "us": 700.0,
+             "derived": f"einsum_noisy_us=900.0|err_sigma fused=0.100 "
+                        f"einsum=0.098 ratio={ratio:.3f}"},
+            {"name": "decode_packed_m8_k576_n128", "us": us_decode,
+             "derived": "unpacked_us=500.0|w_bytes 73728->36864 "
+                        "(2.00x less HBM)"},
+        ],
+    }
+
+
+def test_extract_metrics():
+    m = bench_trend.extract_metrics(_doc())
+    assert m["decode_tok_s"] == pytest.approx(8 / 400.0 * 1e6)
+    assert m["w_bytes_packed"] == 36864
+    assert m["w_bytes_int8"] == 73728
+    assert m["hbm_win"] == pytest.approx(2.0)
+    assert m["sigma_ratio"] == pytest.approx(1.02)
+    assert m["noisy_us"] == 700.0
+    assert m["ref_us"] == 120.0
+
+
+def test_extract_metrics_tolerates_missing_rows():
+    doc = _doc()
+    doc["rows"] = doc["rows"][:1]
+    m = bench_trend.extract_metrics(doc)
+    assert "decode_tok_s" not in m and "sigma_ratio" not in m
+    md = bench_trend.render_markdown([{"label": "x", "metrics": m}])
+    assert "—" in md
+
+
+def test_load_bench_rejects_bad_schema(tmp_path):
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"schema": "other/v1", "rows": [{}]}))
+    with pytest.raises(ValueError):
+        bench_trend.load_bench(str(p))
+
+
+def test_history_append_and_render(tmp_path):
+    hist = tmp_path / "hist.jsonl"
+    for i, label in enumerate(("run-a", "run-b")):
+        b = tmp_path / f"b{i}.json"
+        b.write_text(json.dumps(_doc(us_decode=400.0 + 100 * i)))
+        rc = bench_trend.main(["--history", str(hist), "--append", str(b),
+                               "--label", label,
+                               "--out", str(tmp_path / "TREND.md")])
+        assert rc == 0
+    entries = bench_trend.load_history(str(hist))
+    assert [e["label"] for e in entries] == ["run-a", "run-b"]
+    md = (tmp_path / "TREND.md").read_text()
+    assert "run-a" in md and "run-b" in md
+    assert "20000" in md    # 8 tok / 400 µs
+    assert "2.00×" in md and "36864" in md
+    # table stays well-formed: every data row has the 6 columns
+    rows = [ln for ln in md.splitlines() if ln.startswith("| run-")]
+    assert all(ln.count("|") == 7 for ln in rows)
+
+
+def test_one_shot_mode(tmp_path):
+    b1 = tmp_path / "one" / "BENCH_ci.json"
+    b1.parent.mkdir()
+    b1.write_text(json.dumps(_doc()))
+    out = tmp_path / "T.md"
+    assert bench_trend.main([str(b1), "--out", str(out)]) == 0
+    assert "kernel_bench perf trajectory" in out.read_text()

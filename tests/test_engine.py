@@ -587,7 +587,9 @@ def test_per_channel_through_quantize_params_consumer():
 
 def test_moe_expert_weights_respect_cim_switch():
     """Regression (review): stored codes are picked up only under
-    cfg.cim.enabled, matching common.dense / gru._mm."""
+    cfg.cim.enabled, matching common.dense / gru._mm. Nibble-packed uint8
+    codes ride as a PackedCodes container (codes + carried scales, logical
+    K from the config); int8 containers keep the {"q", "s"} pair."""
     from repro.configs.registry import SMOKES
     from repro.models.moe import _expert_weights
     cfg_on = SMOKES["qwen2-moe-a2.7b"].replace(cim=CIMConfig(enabled=True))
@@ -595,5 +597,12 @@ def test_moe_expert_weights_respect_cim_switch():
     p = {"e_gate": jnp.zeros((4, 8, 8)),
          "e_gate_q": jnp.zeros((4, 4, 8), jnp.uint8),
          "e_gate_scale": jnp.ones((4, 1, 1))}
-    assert set(_expert_weights(p, "e_gate", cfg_on)) == {"q", "s"}
+    wp = _expert_weights(p, "e_gate", cfg_on)
+    assert set(wp) == {"pk"}
+    assert isinstance(wp["pk"], PackedCodes)
+    assert wp["pk"].k == cfg_on.d_model
+    assert wp["pk"].scale is p["e_gate_scale"]
     assert set(_expert_weights(p, "e_gate", cfg_off)) == {"w"}
+    p_int8 = {"e_gate_q": jnp.zeros((4, 8, 8), jnp.int8),
+              "e_gate_scale": jnp.ones((4, 1, 1))}
+    assert set(_expert_weights(p_int8, "e_gate", cfg_on)) == {"q", "s"}

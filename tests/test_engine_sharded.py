@@ -1,0 +1,245 @@
+"""Mesh-sharded fused CIM dispatch: sharded-vs-single-device semantics.
+
+Fast lanes run in-process on the default single CPU device (a 1-device mesh
+must be bit-identical to the unsharded kernel — the salt is 0 and shard_map
+is an identity wrapper). Multi-device semantics (psum over the contraction
+shards, axis_index-salted seed decorrelation, packed/unpacked bit-identity
+under a mesh) run in a subprocess with 4 forced host devices, since jax
+locks the device count at first init.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cim_matmul import CIMConfig, cim_matmul
+from repro.core.engine import choose_backend
+from repro.core.macro import SimLevel
+from repro.kernels.ops import salt_seed
+from repro.launch.mesh import make_host_mesh
+from repro.parallel import sharding
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_FORCED = os.environ.get("REPRO_FORCE_JNP", "").strip().lower() in (
+    "1", "true", "yes")
+needs_pallas = pytest.mark.skipif(
+    _FORCED, reason="REPRO_FORCE_JNP pins auto to jnp backends")
+
+
+def _noisy_cfg(seed=0, backend="auto"):
+    return CIMConfig(
+        enabled=True, backend=backend, noise_seed=seed,
+        macro=dataclasses.replace(CIMConfig().macro,
+                                  sim_level=SimLevel.NOISY))
+
+
+def _xw(key, m=8, k=576, n=64):
+    x = jax.random.normal(key, (m, k))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+    return x, w
+
+
+@pytest.fixture
+def mesh1():
+    mesh = make_host_mesh(1, 1)
+    sharding.set_mesh(mesh)
+    yield mesh
+    sharding.set_mesh(None)
+
+
+# ---------------------------------------------------------------------------
+# fast in-process lanes
+# ---------------------------------------------------------------------------
+@needs_pallas
+def test_one_device_mesh_bit_identical_noisy(mesh1):
+    """Acceptance: the shard_map-wrapped fused stochastic kernel under a
+    1-device mesh is bit-identical to the unsharded call (axis_index salt
+    is 0 → same PRNG stream, same group boundaries)."""
+    x, w = _xw(jax.random.PRNGKey(0))
+    cfg = _noisy_cfg(seed=3)
+    y_mesh = cim_matmul(x, w, cfg)
+    sharding.set_mesh(None)
+    y_plain = cim_matmul(x, w, cfg)
+    np.testing.assert_array_equal(np.asarray(y_mesh), np.asarray(y_plain))
+
+
+@needs_pallas
+def test_one_device_mesh_bit_identical_ideal(mesh1):
+    x, w = _xw(jax.random.PRNGKey(1))
+    cfg = CIMConfig(enabled=True)
+    y_mesh = cim_matmul(x, w, cfg)
+    sharding.set_mesh(None)
+    np.testing.assert_array_equal(np.asarray(y_mesh),
+                                  np.asarray(cim_matmul(x, w, cfg)))
+
+
+def test_auto_still_resolves_fused_under_mesh(monkeypatch):
+    """A mesh no longer demotes NOISY+seed auto-selection to scan — the
+    engine wraps the fused kernel in shard_map instead (the selection
+    itself is mesh-independent; REPRO_FORCE_JNP still pins jnp)."""
+    mesh = types.SimpleNamespace(axis_names=("data", "model"),
+                                 shape={"data": 16, "model": 16})
+    monkeypatch.setattr(sharding, "_MESH", mesh)
+    x = jnp.zeros((4, 576))
+    w = jnp.zeros((576, 64))
+    monkeypatch.delenv("REPRO_FORCE_JNP", raising=False)
+    assert choose_backend(_noisy_cfg(seed=0), x, w) == "pallas_noisy"
+    monkeypatch.setenv("REPRO_FORCE_JNP", "1")
+    assert choose_backend(_noisy_cfg(seed=0), x, w) in ("einsum", "scan")
+
+
+def test_mvm_plan_axis_assignment(monkeypatch):
+    mesh = types.SimpleNamespace(axis_names=("pod", "data", "model"),
+                                 shape={"pod": 2, "data": 16, "model": 16})
+    monkeypatch.setattr(sharding, "_MESH", mesh)
+    # K=2304 divides 16 → contraction over data; M=2048 over model; the
+    # leading activation dim over pod
+    plan = sharding.mvm_plan((128, 1, 2304), 2304, 2048)
+    assert plan.ctr_axes == ("data",)
+    assert plan.col_axes == ("model",)
+    assert plan.row_axes == ("pod",)
+    # K not divisible → contraction replicated, rows take data too
+    plan = sharding.mvm_plan((128, 1, 2300), 2300, 2048)
+    assert plan.ctr_axes == ()
+    assert plan.row_axes == ("pod", "data")
+    # packed weights shard K in byte units: K=2304 divides 16 but not 32
+    # half-rows → k_unit=2 drops the contraction sharding at data=16 when
+    # K/16 would be odd
+    plan = sharding.mvm_plan((8, 2288), 2288, 64, k_unit=2)
+    assert plan.ctr_axes == ()   # 2288 % (16*2) = 16 → replicate
+    plan = sharding.mvm_plan((8, 2304), 2304, 64, k_unit=2)
+    assert plan.ctr_axes == ("data",)
+    # no mesh → identity plan
+    monkeypatch.setattr(sharding, "_MESH", None)
+    plan = sharding.mvm_plan((8, 2304), 2304, 64)
+    assert plan.ctr_axes == plan.row_axes == plan.col_axes == ()
+
+
+def test_in_shard_context_flag():
+    """sharding.shard_map marks its body trace: the engine's nesting guard
+    (a matmul inside the MoE EP region must not open a second shard_map)."""
+    mesh = make_host_mesh(1, 1)
+    seen = []
+
+    def body(x):
+        seen.append(sharding.in_shard_context())
+        return x * 2
+
+    assert not sharding.in_shard_context()
+    out = sharding.shard_map(
+        body, mesh=mesh,
+        in_specs=(jax.sharding.PartitionSpec(),),
+        out_specs=jax.sharding.PartitionSpec(),
+        check_vma=False)(jnp.ones((4,)))
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((4,)))
+    assert seen == [True]
+    assert not sharding.in_shard_context()
+
+
+def test_salt_seed_contract():
+    """salt 0 = identity; distinct salts give distinct streams; python-int
+    and traced salts agree (the inl_seed/axis_index salting contract)."""
+    s = jnp.int32(1234)
+    assert int(salt_seed(s, 0)) == 1234
+    a, b = int(salt_seed(s, 1)), int(salt_seed(s, 2))
+    assert len({1234, a, b}) == 3
+    assert int(salt_seed(s, jnp.int32(7))) == int(salt_seed(s, 7))
+    # golden-ratio scramble, bit-for-bit: seed ^ (salt * 0x9E3779B9 mod 2^32)
+    expect = np.uint32(1234) ^ np.uint32((7 * 0x9E3779B9) & 0xFFFFFFFF)
+    assert np.uint32(int(salt_seed(s, 7)) & 0xFFFFFFFF) == expect
+
+
+# ---------------------------------------------------------------------------
+# multi-device semantics (subprocess: 4 forced host devices, 2×2 mesh)
+# ---------------------------------------------------------------------------
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+os.environ.pop("REPRO_FORCE_JNP", None)
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.core.cim_matmul import (CIMConfig, cim_matmul,
+                                   cim_matmul_prequant,
+                                   quantize_weight_offline)
+from repro.core.macro import SimLevel
+from repro.kernels.ops import pack_codes
+from repro.launch.mesh import make_host_mesh
+from repro.parallel import sharding
+
+noisy = CIMConfig(enabled=True, noise_seed=3,
+                  macro=dataclasses.replace(CIMConfig().macro,
+                                            sim_level=SimLevel.NOISY))
+ideal = CIMConfig(enabled=True)
+key = jax.random.PRNGKey(0)
+x = jax.random.normal(key, (8, 576))
+w = jax.random.normal(jax.random.fold_in(key, 1), (576, 64)) * 0.1
+
+# unsharded references
+y_ideal = cim_matmul(x, w, ideal)
+y_noisy_1dev = cim_matmul(x, w, noisy)
+y_ein = cim_matmul(x, w, dataclasses.replace(noisy, backend="einsum"))
+
+mesh = make_host_mesh(2, 2)
+sharding.set_mesh(mesh)
+
+# 1) deterministic kernel: K=576 over data=2 → 288 per shard, group
+# boundaries stay aligned to the 144-row macro depth, so the sharded MVM is
+# the same set of ADC conversions — equal up to f32 reassociation of the
+# correction arithmetic.
+y_ideal_m = cim_matmul(x, w, ideal)
+np.testing.assert_allclose(np.asarray(y_ideal_m), np.asarray(y_ideal),
+                           rtol=5e-3, atol=1e-3)
+
+# 2) stochastic kernel through the psum path: same ADC-chain error
+# distribution as the einsum reference (PR 2 tolerances)
+y_noisy_m = cim_matmul(x, w, noisy)
+e_sh = np.asarray(y_noisy_m - y_ideal).ravel()
+e_ein = np.asarray(y_ein - y_ideal).ravel()
+ratio = float(np.std(e_sh)) / max(float(np.std(e_ein)), 1e-12)
+assert 0.85 < ratio < 1.18, (np.std(e_sh), np.std(e_ein))
+scale = float(np.std(e_ein)) / np.sqrt(e_ein.size)
+assert abs(float(np.mean(e_sh) - np.mean(e_ein))) < 6 * scale
+
+# ...and the sharded stochastic call is reproducible per seed
+np.testing.assert_array_equal(np.asarray(cim_matmul(x, w, noisy)),
+                              np.asarray(y_noisy_m))
+
+# 3) axis_index-salted seeds decorrelate shards: duplicate the weight
+# columns so the two model shards solve IDENTICAL local problems at
+# identical local coordinates — without the salt their draws would be
+# bit-equal. (The unsharded kernel keeps distinct global coordinates, so
+# it never had this failure mode.)
+w2 = jnp.concatenate([w, w], axis=1)            # [576, 128] → 64 cols/shard
+y2 = cim_matmul(x, w2, noisy)
+assert bool(jnp.any(y2[:, :64] != y2[:, 64:])), "shards drew the same noise"
+
+# 4) packed/unpacked bit-identity holds under the mesh too (noise draws are
+# container-independent; the packed plan shards K in byte units)
+codes, s_w = quantize_weight_offline(w, noisy)
+y_u = cim_matmul_prequant(x, codes, s_w, noisy)
+y_p = cim_matmul_prequant(x, pack_codes(codes), s_w, noisy)
+np.testing.assert_array_equal(np.asarray(y_p), np.asarray(y_u))
+
+# 5) grads flow through the sharded custom-VJP path
+g = jax.grad(lambda a: jnp.sum(cim_matmul(a, w, noisy)))(x)
+assert g.shape == x.shape and bool(jnp.all(jnp.isfinite(g)))
+print("ENGINE_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_multi_device_sharded_semantics():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "ENGINE_SHARDED_OK" in proc.stdout

@@ -62,3 +62,87 @@ def test_moe_psum_and_a2a_match_local_reference():
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "MOE_DISTRIBUTED_OK" in proc.stdout
+
+
+SCRIPT_DECODE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.cim_matmul import CIMConfig
+from repro.models import moe
+from repro.models.quantize import quantize_params
+from repro.parallel import sharding
+from repro.launch.mesh import make_host_mesh
+
+cfg = ModelConfig(arch="t", family="moe", n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=16, vocab=64, dtype="float32",
+                  moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=16,
+                                capacity_factor=8.0))
+key = jax.random.PRNGKey(0)
+p = moe.init(key, cfg)
+xd = jax.random.normal(jax.random.fold_in(key, 2), (8, 1, 32))  # decode t=1
+
+sharding.set_mesh(None)
+yd_local, auxd_local = moe.apply(p, xd, cfg, train=False)
+
+cfg_a2a = dataclasses.replace(
+    cfg, moe=dataclasses.replace(cfg.moe, ep_mode="a2a"))
+mesh = make_host_mesh(2, 2)
+sharding.set_mesh(mesh)
+with mesh:
+    # t=1 is not divisible by the model axis → the chunked a2a decode path
+    yd_a2a, auxd_a2a = jax.jit(
+        lambda pp, xx: moe.apply(pp, xx, cfg_a2a, train=False))(p, xd)
+np.testing.assert_allclose(np.asarray(yd_a2a), np.asarray(yd_local),
+                           rtol=2e-5, atol=2e-5)
+np.testing.assert_allclose(float(auxd_a2a), float(auxd_local), rtol=5e-2)
+
+# ---- nibble-packed expert weights (engine.PackedCodes through the EP
+# shard specs): the dispatch layout re-calibrates the dynamic activation
+# scale per expert buffer, so agreement with the local packed reference is
+# at the 4-bit-requantization scale, not bitwise — pin it to the same order
+# as the local quantization error vs float.
+cfg_cim = dataclasses.replace(cfg, cim=CIMConfig(enabled=True,
+                                                 backend="scan"))
+cfg_cim_a2a = dataclasses.replace(
+    cfg_cim, moe=dataclasses.replace(cfg.moe, ep_mode="a2a"))
+pq = quantize_params(p, cfg_cim, packed=True)
+assert pq["e_gate_q"].dtype == jnp.uint8        # packed container in place
+sharding.set_mesh(None)
+y_float = yd_local
+yq_local, _ = moe.apply(pq, xd, cfg_cim, train=False)
+err_ref = float(np.max(np.abs(np.asarray(yq_local - y_float))))
+sharding.set_mesh(mesh)
+with mesh:
+    yq_a2a, _ = jax.jit(
+        lambda pp, xx: moe.apply(pp, xx, cfg_cim_a2a, train=False))(pq, xd)
+    # auto backend: the fused packed Pallas kernel runs per-shard inside
+    # the EP shard_map (in_shard_context guard) — must agree with scan to
+    # float tolerance on the identical buffers
+    cfg_auto = dataclasses.replace(cfg_cim_a2a,
+                                   cim=CIMConfig(enabled=True))
+    yq_auto, _ = jax.jit(
+        lambda pp, xx: moe.apply(pp, xx, cfg_auto, train=False))(pq, xd)
+err_a2a = float(np.max(np.abs(np.asarray(yq_a2a - y_float))))
+assert err_a2a < 3 * max(err_ref, 1e-6), (err_a2a, err_ref)
+np.testing.assert_allclose(np.asarray(yq_auto), np.asarray(yq_a2a),
+                           rtol=2e-4, atol=2e-4)
+print("MOE_A2A_DECODE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_moe_a2a_decode_and_packed_experts():
+    """The chunked a2a decode path (t=1) matches the local reference; the
+    nibble-packed PackedCodes expert containers ride the EP shard specs in
+    both scan and auto (fused-Pallas-per-shard) backends."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_FORCE_JNP", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT_DECODE], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MOE_A2A_DECODE_OK" in proc.stdout
