@@ -1,9 +1,12 @@
 """cim_mvm Pallas kernel micro-bench: interpret-mode wall time vs the jnp
 reference across tile shapes (structural check — real perf is a TPU matter,
 the §Perf roofline reasons from the lowered IR), a packed-vs-unpacked
-decode-shape sweep quantifying the nibble-packing HBM win, and a stochastic
+decode-shape sweep quantifying the nibble-packing HBM win, a stochastic
 (NOISY) fused-kernel sweep checking the in-kernel PRNG's distributional
-agreement with the einsum reference.
+agreement with the einsum reference, and a SERVING sweep driving the
+runtime.server engines (paged vs slot cache) over concurrent requests with
+mixed prompt lengths — decode tok/s plus the resident KV-cache bytes at
+25 % slot occupancy (the paged-pool memory win).
 
 CLI (the CI bench-smoke job):
     PYTHONPATH=src python -m benchmarks.kernel_bench --small \\
@@ -25,7 +28,7 @@ from repro.kernels.ref import cim_mvm_ref
 
 from .common import row, timeit
 
-BENCH_SCHEMA = "pico-ram/kernel_bench/v1"
+BENCH_SCHEMA = "pico-ram/kernel_bench/v2"  # v2: + serve_* serving-sweep rows
 
 
 def run(small: bool = False):
@@ -52,6 +55,7 @@ def run(small: bool = False):
                        f"interpret_mode|vs_ref={us / max(us_ref, 1e-9):.2f}x"))
     out += run_noisy_sweep(small)
     out += run_packed_sweep(small)
+    out += run_serving_sweep(small)
     return out
 
 
@@ -112,6 +116,79 @@ def run_packed_sweep(small: bool = False):
             f"decode_packed_m{m}_k{k}_n{n}", us_p,
             f"unpacked_us={us_u:.1f}|w_bytes {bytes_u}->{bytes_p} "
             f"({bytes_u / bytes_p:.2f}x less HBM)"))
+    return out
+
+
+def run_serving_sweep(small: bool = False):
+    """Continuous-batching server sweep: paged vs slot engines end to end.
+
+    Concurrent requests with mixed (seeded) prompt lengths drain through
+    both runtime.server engines on the smoke transformer. Reported:
+
+      * decode tok/s per engine (interpret/CPU wall clock — a structural
+        trend like the kernel rows, not TPU absolute perf);
+      * resident KV-cache bytes at 25 % slot occupancy: the slot cache
+        always holds n_slots × max_len positions, the paged pool only the
+        blocks its admitted requests actually cached — the exact byte
+        counts are platform-free and are the paged-engine win the trend
+        pipeline tracks.
+    """
+    from repro.configs.registry import SMOKES
+    from repro.models import registry as model_registry
+    from repro.runtime.server import Request, Server
+
+    out = []
+    import numpy as np
+    cfg = SMOKES["internlm2-1.8b"].replace(dtype="float32")
+    n_slots, max_len, block = (4, 64, 8) if small else (8, 128, 16)
+    n_req, max_new = (4, 4) if small else (12, 8)
+    params = model_registry.init_params(jax.random.PRNGKey(0), cfg,
+                                        max_seq=max_len)
+    rng = np.random.RandomState(11)
+    plens = [int(rng.randint(3, max_len // 4)) for _ in range(n_req)]
+    prompts = [rng.randint(0, cfg.vocab, size=p).tolist() for p in plens]
+
+    def drain(paged: bool) -> Server:
+        srv = Server(params, cfg, n_slots=n_slots, max_len=max_len,
+                     paged=paged, block_size=block,
+                     prefill_chunk=max_len // 8)
+        for p in prompts:
+            srv.submit(Request(prompt=list(p), max_new_tokens=max_new))
+        srv.run_until_drained()
+        return srv
+
+    slot_bytes = 0
+    for paged in (False, True):
+        srv = drain(paged)
+        m = srv.metrics.summary()
+        name = "paged" if paged else "slots"
+        us_per_tok = m["wall_s"] * 1e6 / max(m["decode_tokens"], 1)
+        out.append(row(
+            f"serve_decode_{name}_s{n_slots}_r{n_req}", us_per_tok,
+            f"decode_tok_s={m['decode_tok_s']:.1f}|"
+            f"prefill_tok_s={m['prefill_tok_s']:.1f}|steps={m['steps']}"))
+        if not paged:
+            slot_bytes = srv.kv_cache_bytes()["total"]
+
+    # KV residency at 25 % slot occupancy: drain ceil(slots/4) requests
+    # through the paged engine and report its PEAK block residency (robust
+    # to schedule changes, unlike a mid-flight snapshot) vs the slot
+    # cache's always-resident n_slots × max_len footprint.
+    occ = max(1, n_slots // 4)
+    srv = Server(params, cfg, n_slots=n_slots, max_len=max_len, paged=True,
+                 block_size=block, prefill_chunk=max_len // 8)
+    for p in prompts[:occ]:
+        srv.submit(Request(prompt=list(p), max_new_tokens=max_new))
+    srv.run_until_drained()
+    per_block = srv.kv_cache_bytes()["total"] \
+        // (srv.alloc.stats.num_blocks + 1)
+    paged_bytes = per_block * srv.alloc.stats.peak_in_use
+    assert paged_bytes > 0, "occupancy probe allocated no blocks"
+    t_probe = srv.metrics.wall_s * 1e6
+    out.append(row(
+        f"serve_kv_bytes_occ25_s{n_slots}", max(t_probe, 1e-3),
+        f"kv_bytes slot={slot_bytes} paged={paged_bytes} "
+        f"({slot_bytes / paged_bytes:.2f}x less HBM)"))
     return out
 
 

@@ -1,6 +1,9 @@
 """Serve a small model with batched requests on the CIM execution mode.
 
-    PYTHONPATH=src python examples/serve_decode.py [--cim]
+    PYTHONPATH=src python examples/serve_decode.py [--cim] [--paged]
+
+--paged runs the paged-KV engine (block-pool cache, chunked prefill through
+the unified step); default is the legacy slot cache.
 """
 import argparse
 import time
@@ -20,13 +23,16 @@ def main():
                     help="run every matmul on the simulated macro")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV engine + chunked prefill")
     args = ap.parse_args()
 
     cfg = SMOKES["internlm2-1.8b"]
     if args.cim:
         cfg = cfg.replace(cim=CIMConfig(enabled=True))
     params = registry.init_params(jax.random.PRNGKey(0), cfg, max_seq=96)
-    server = Server(params, cfg, n_slots=args.slots, max_len=96)
+    server = Server(params, cfg, n_slots=args.slots, max_len=96,
+                    paged=args.paged, block_size=8, prefill_chunk=8)
 
     rng = np.random.RandomState(0)
     reqs = []

@@ -24,7 +24,11 @@ Tracked columns (parsed from the bench rows; missing rows render as "—"):
   * fused-vs-einsum σ ratio of the stochastic kernel's ADC-chain error (the
     in-kernel PRNG distributional-agreement number the engine tests pin —
     drift here means a PRNG/transfer regression);
-  * fused stochastic kernel wall µs.
+  * fused stochastic kernel wall µs;
+  * (schema v2) the serving sweep: paged-engine decode tok/s from the
+    end-to-end runtime.server drain, and the resident KV-cache bytes at
+    25 % slot occupancy — paged pool vs the monolithic slot cache, with the
+    ×-less-HBM factor (exact byte counts, platform-free).
 """
 from __future__ import annotations
 
@@ -68,6 +72,17 @@ def extract_metrics(doc: dict) -> dict:
                 out["sigma_ratio"] = float(sr.group(1))
         if name.startswith("kernel_ref_jnp"):
             out["ref_us"] = us
+        if name.startswith("serve_decode_paged"):
+            sd = re.search(r"decode_tok_s=([\d.]+)", derived)
+            if sd:
+                out["serve_decode_tok_s"] = float(sd.group(1))
+        if name.startswith("serve_kv_bytes_occ25"):
+            kb = re.search(
+                r"kv_bytes\s+slot=(\d+)\s+paged=(\d+)\s+\(([\d.]+)x", derived)
+            if kb:
+                out["kv_bytes_slot"] = int(kb.group(1))
+                out["kv_bytes_paged"] = int(kb.group(2))
+                out["kv_win"] = float(kb.group(3))
     return out
 
 
@@ -111,19 +126,23 @@ def render_markdown(entries: list[dict]) -> str:
         "perf. Byte counts and the σ ratio are platform-free.",
         "",
         "| run | decode tok/s | packed weight HBM B | vs int8 | "
-        "fused σ ratio | fused noisy µs |",
-        "|---|---|---|---|---|---|",
+        "fused σ ratio | fused noisy µs | serve tok/s | paged KV B @25% | "
+        "vs slot |",
+        "|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         m = e.get("metrics", {})
         lines.append(
-            "| {} | {} | {} | {} | {} | {} |".format(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} |".format(
                 str(e.get("label", "?"))[:24],
                 _fmt(m.get("decode_tok_s"), "{:.0f}"),
                 _fmt(m.get("w_bytes_packed"), "{:d}"),
                 _fmt(m.get("hbm_win"), "{:.2f}×"),
                 _fmt(m.get("sigma_ratio")),
                 _fmt(m.get("noisy_us"), "{:.1f}"),
+                _fmt(m.get("serve_decode_tok_s"), "{:.1f}"),
+                _fmt(m.get("kv_bytes_paged"), "{:d}"),
+                _fmt(m.get("kv_win"), "{:.2f}×"),
             ))
     shapes = {e.get("metrics", {}).get("decode_shape") for e in entries}
     shapes.discard(None)

@@ -1,10 +1,14 @@
-"""Serving launcher: slot-based batched decode over synthetic requests.
+"""Serving launcher: continuous-batching decode over synthetic requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --requests 8 --slots 4 --max-new 16 [--cim bp]
 
+  # paged-KV engine: block pool + chunked prefill through the unified step
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --paged --prefill-chunk 8 --block-size 16 [--cim bp-prequant]
+
   REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
-      --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host
+      --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host [--paged]
       # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
       # kernels end-to-end on a small host mesh
 """
@@ -41,6 +45,21 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-KV engine: block-pool cache + chunked "
+                         "prefill through the unified jit'd step (decode is "
+                         "the C=1 compilation); composes with --cim "
+                         "bp-prequant (PackedCodes weights) and --mesh host")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV block (paged engine)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="usable blocks in the pool (default: slot-cache "
+                         "parity, slots × max-len / block-size)")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt tokens per chunk through the unified step")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="max new tokens per step across all lanes "
+                         "(default: slots + prefill chunk)")
     ap.add_argument("--cim", choices=("off", "bp", "bp-noisy", "bp-prequant"),
                     default="off",
                     help="bp-noisy = NOISY converter chain with "
@@ -78,7 +97,10 @@ def main():
     params = registry.init_params(jax.random.PRNGKey(0), cfg,
                                   max_seq=args.max_len)
     server = Server(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                    prequant=args.cim == "bp-prequant")
+                    prequant=args.cim == "bp-prequant", paged=args.paged,
+                    block_size=args.block_size, num_blocks=args.num_blocks,
+                    prefill_chunk=args.prefill_chunk,
+                    token_budget=args.token_budget)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -98,6 +120,21 @@ def main():
     print(f"{args.requests} requests, {total_new} tokens, "
           f"{server.steps_run} decode steps, {dt:.2f}s "
           f"({total_new / max(dt, 1e-9):.1f} tok/s)")
+    m = server.metrics.summary()
+    kv = server.kv_cache_bytes()
+    ttft = [r.ttft_s for r in reqs]
+    lat = [r.latency_s for r in reqs]
+    print(f"engine={'paged' if args.paged else 'slots'} "
+          f"decode={m['decode_tok_s']:.1f} tok/s "
+          f"prefill={m['prefill_tok_s']:.1f} tok/s "
+          f"kv_bytes total={kv['total']} in_use={kv['in_use']}")
+    print(f"ttft p50={np.median(ttft) * 1e3:.1f}ms "
+          f"max={max(ttft) * 1e3:.1f}ms | latency "
+          f"p50={np.median(lat) * 1e3:.1f}ms max={max(lat) * 1e3:.1f}ms")
+    if args.paged:
+        st = server.alloc.stats
+        print(f"blocks: pool={st.num_blocks} peak={st.peak_in_use} "
+              f"allocs={st.total_allocs} frees={st.total_frees}")
 
 
 if __name__ == "__main__":

@@ -316,6 +316,113 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# paged KV cache: block-pool scatter/gather + windowed attention
+# ---------------------------------------------------------------------------
+def paged_write(pool: jax.Array, new: jax.Array,
+                flat_idx: jax.Array) -> jax.Array:
+    """Scatter per-token K or V rows into a block pool.
+
+    pool [NB, bs, KH, dh]; new [B, C, KH, dh]; flat_idx [B, C] indexes the
+    flattened (NB·bs) token-slot axis. Masked lanes arrive pre-pointed at
+    the trash block (flat index 0..bs-1) by the caller, so no separate mask
+    is needed here — duplicate trash writes land in storage that is never
+    read with non-zero attention weight.
+    """
+    nb, bs = pool.shape[:2]
+    flat = pool.reshape(nb * bs, *pool.shape[2:])
+    flat = flat.at[flat_idx.reshape(-1)].set(
+        new.reshape(-1, *new.shape[2:]).astype(pool.dtype))
+    return flat.reshape(pool.shape)
+
+
+def paged_gather(pool: jax.Array, tables: jax.Array) -> jax.Array:
+    """Gather each slot's window from the block pool.
+
+    pool [NB, bs, KH, dh]; tables [B, MB] physical block ids. Returns the
+    contiguous per-slot view [B, MB·bs, KH, dh] — the same window shape the
+    dense slot cache gave decode_attention, so the per-position math (and,
+    for decode, the bits) match the unpaged path. Unallocated table entries
+    point at the trash block; those positions sit at >= the slot's length
+    and are masked before any softmax.
+    """
+    b, mb = tables.shape
+    win = pool[tables]                       # [B, MB, bs, KH, dh]
+    return win.reshape(b, mb * pool.shape[1], *pool.shape[2:])
+
+
+def paged_prefill_attention(q: jax.Array, k_win: jax.Array, v_win: jax.Array,
+                            positions: jax.Array,
+                            kv_len: jax.Array) -> jax.Array:
+    """Causal attention of a prompt chunk against its gathered window.
+
+    q [B,C,H,dh] × k/v windows [B,W,KH,dh] → [B,C,H,dh]; positions [B,C] is
+    each query's absolute position (lens + chunk offset), kv_len [B] the
+    tokens valid in the window INCLUDING this chunk's writes. Exact (one-
+    pass) softmax over the full window rather than the online-softmax of
+    chunked_attention: the result is then independent of how the prompt was
+    chunked — the invariance the chunked-prefill equivalence tests pin —
+    and decode (C=1) keeps using decode_attention so its bits match the
+    dense-cache path. W is one request's max context, so the [B,C,KH,G,W]
+    score tensor is chunk-bounded; a Pallas paged-attention kernel is the
+    TPU-scale follow-up (see ROADMAP serving section).
+    """
+    b, cq, h, dh = q.shape
+    w = k_win.shape[1]
+    kh = k_win.shape[2]
+    g = h // kh
+    qg = q.reshape(b, cq, kh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bqkgs", qg, k_win,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(dh)
+    pos_s = jnp.arange(w)[None, None, :]
+    mask = (pos_s <= positions[:, :, None]) & (pos_s < kv_len[:, None, None])
+    scores = jnp.where(mask[:, :, None, None, :], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bqkgs,bskd->bqkgd", p.astype(v_win.dtype), v_win,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, cq, h, dh).astype(q.dtype)
+
+
+def paged_attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
+                          positions: jax.Array, cache: dict,
+                          flat_idx: jax.Array, tables: jax.Array,
+                          kv_len: jax.Array):
+    """Self-attention over a paged KV pool — the unified prefill/decode step.
+
+    x [B, C, D] (C = 1 for decode, the prefill chunk width otherwise);
+    cache {"k": [NB, bs, KH, dh], "v": ...} is ONE layer's physical pool.
+    Projects and RoPEs this step's tokens at their true per-slot positions,
+    scatters them into the pool at flat_idx (masked lanes → trash block),
+    gathers each slot's window through its block table, and attends with
+    per-slot lengths. Returns (y, updated layer pool).
+    """
+    b, c, _ = x.shape
+    dh = cfg.head_dim
+    q = dense(p, x, cfg, w="wq", b="bq").reshape(b, c, cfg.n_heads, dh)
+    q = constrain(q, "batch", None, "tp", None)
+    k1 = dense(p, x, cfg, w="wk", b="bk").reshape(b, c, cfg.n_kv_heads, dh)
+    v1 = dense(p, x, cfg, w="wv", b="bv").reshape(b, c, cfg.n_kv_heads, dh)
+    if cfg.pos_embed == "rope":
+        q = rope(q, positions, cfg.rope_theta, _rope_dims(cfg))
+        k1 = rope(k1, positions, cfg.rope_theta, _rope_dims(cfg))
+    k_pool = paged_write(cache["k"], k1, flat_idx)
+    v_pool = paged_write(cache["v"], v1, flat_idx)
+    k_win = paged_gather(k_pool, tables)
+    v_win = paged_gather(v_pool, tables)
+    if c == 1:
+        # same window shape + mask math as the dense slot cache → decode
+        # stays bit-identical to the unpaged decode_attention path
+        o = decode_attention(q, k_win, v_win,
+                             kv_len[:, None, None, None])
+    else:
+        o = paged_prefill_attention(q, k_win, v_win, positions, kv_len)
+    o = o.reshape(b, c, cfg.n_heads * dh)
+    o = constrain(o, "batch", None, "tp")
+    y = dense(p, o, cfg, w="wo", b="bo")
+    return constrain(y, *res_axes(cfg)), {"k": k_pool, "v": v_pool}
+
+
+# ---------------------------------------------------------------------------
 # attention layer (projections + cache plumbing)
 # ---------------------------------------------------------------------------
 def attention_init(key, cfg: ModelConfig, *, d_model: int | None = None) -> Params:

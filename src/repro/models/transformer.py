@@ -414,6 +414,121 @@ def _pad_cache(kv: dict, max_len: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# serving: paged KV cache (block pool + block tables)
+# ---------------------------------------------------------------------------
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged serving covers the GQA transformer archs (dense / MoE / VLM
+    text decode). MLA latent caches and whisper cross-attention keep the
+    dense slot cache for now (ROADMAP serving section tracks both)."""
+    return cfg.mla is None and not cfg.cross_attention
+
+
+def init_paged_cache(cfg: ModelConfig, num_blocks: int,
+                     block_size: int) -> dict:
+    """Physical KV block pools [L, NB, bs, KH, dh] (zeros).
+
+    One pool per layer stack; NB includes the trash block (physical id 0).
+    Unlike init_cache there is no per-slot batch axis — slots share the pool
+    through their block tables, so resident bytes scale with allocated
+    blocks, not n_slots × max_len.
+    """
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV serving not implemented for arch {cfg.arch!r} "
+            "(MLA latent / cross-attention caches)")
+    dt = dtype_of(cfg)
+    n_wide = cfg.moe.first_dense if cfg.moe else 0
+    n_main = cfg.n_layers - n_wide
+    kvd = (num_blocks, block_size, cfg.n_kv_heads, cfg.head_dim)
+    mk = lambda L: {"k": jnp.zeros((L,) + kvd, dt),
+                    "v": jnp.zeros((L,) + kvd, dt)}
+    cache = {"layers": mk(n_main)}
+    if n_wide:
+        cache["dense_layers"] = mk(n_wide)
+    return cache
+
+
+def _layer_paged(lp: dict, h: jax.Array, layer_pool: dict, cfg: ModelConfig,
+                 *, positions, flat_idx, tables, kv_len):
+    a, new_pool = common.paged_attention_apply(
+        lp["attn"], norm(lp["norm1"], h, cfg), cfg, positions=positions,
+        cache=layer_pool, flat_idx=flat_idx, tables=tables, kv_len=kv_len)
+    h = h + a
+    hn = norm(lp["norm2"], h, cfg)
+    if "router" in lp["ffn"]:
+        f, _ = moe.apply(lp["ffn"], hn, cfg, train=False)
+    else:
+        f = mlp_apply(lp["ffn"], hn, cfg)
+    return h + f, new_pool
+
+
+def _paged_stack(stacked, pools, h, cfg, *, positions, flat_idx, tables,
+                 kv_len):
+    def body(hh, xs):
+        lp, lc = xs
+        hh, new_pool = _layer_paged(lp, hh, lc, cfg, positions=positions,
+                                    flat_idx=flat_idx, tables=tables,
+                                    kv_len=kv_len)
+        return hh, new_pool
+
+    return common.scan_layers(body, h, (stacked, pools),
+                              unroll=not cfg.scan_layers)
+
+
+def paged_step(params: dict, tokens: jax.Array, cache: dict,
+               tables: jax.Array, lens: jax.Array, valid: jax.Array,
+               cfg: ModelConfig):
+    """One unified serving step over the paged pool: prefill chunks and
+    decode are the SAME function (decode is the C=1 compilation).
+
+    tokens [B, C] — C=1 for a pure-decode step, the prefill chunk width
+    otherwise; a mixed batch runs decode slots as valid=1 lanes inside a
+    C-wide call. lens [B] = tokens already in each slot's cache; valid [B]
+    = new tokens this step (0 = idle lane). Writes each slot's new K/V at
+    its true positions through its block table (masked lanes → the trash
+    block), attends per-slot, and returns (logits [B, V] taken at each
+    slot's LAST valid position, updated pool). The host scheduler decides
+    whose logits mean anything this step (decode slots every step;
+    prefilling slots only on their final chunk).
+    """
+    b, c = tokens.shape
+    block_size = jax.tree_util.tree_leaves(cache)[0].shape[2]
+    window = tables.shape[1] * block_size
+    positions = lens[:, None] + jnp.arange(c)[None, :]          # [B, C]
+
+    x = embed_lookup(params["tok"], tokens, cfg)
+    if cfg.pos_embed == "learned":
+        x = x + params["dec_pos"]["pos_embed"][
+            jnp.clip(positions, 0, params["dec_pos"]["pos_embed"].shape[0] - 1)]
+
+    # write targets: logical position → (physical block, offset); lanes
+    # beyond `valid` (and beyond the window) land in the trash block
+    pos_w = jnp.minimum(positions, window - 1)
+    blk = jnp.take_along_axis(tables, pos_w // block_size, axis=1)
+    flat_idx = blk * block_size + pos_w % block_size
+    in_valid = jnp.arange(c)[None, :] < valid[:, None]
+    flat_idx = jnp.where(in_valid & (positions < window), flat_idx, 0)
+    kv_len = lens + valid
+
+    new_cache = dict(cache)
+    if "dense_layers" in params:
+        x, np_ = _paged_stack(params["dense_layers"], cache["dense_layers"],
+                              x, cfg, positions=positions, flat_idx=flat_idx,
+                              tables=tables, kv_len=kv_len)
+        new_cache["dense_layers"] = np_
+    x, np_ = _paged_stack(params["layers"], cache["layers"], x, cfg,
+                          positions=positions, flat_idx=flat_idx,
+                          tables=tables, kv_len=kv_len)
+    new_cache["layers"] = np_
+    x = norm(params["final_norm"], x, cfg)
+    last = jnp.maximum(valid - 1, 0)                            # [B]
+    h_last = jnp.take_along_axis(
+        x, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    logits = unembed(params["tok"], h_last, cfg)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
 # dry-run input specs
 # ---------------------------------------------------------------------------
 def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:

@@ -1,0 +1,144 @@
+"""Paged KV-cache bookkeeping: fixed-size blocks, a free-list allocator,
+and per-slot block tables.
+
+The device side (models.transformer.init_paged_cache / paged_step) sees one
+physical pool of `num_blocks` blocks per layer — [L, NB, block_size, KH, dh]
+— plus an int32 block table [n_slots, max_blocks] mapping each slot's
+logical block index to a physical block id. Everything in THIS module is
+host-side numpy: allocation decisions are control flow, not compute, exactly
+as a production engine keeps its allocator off the accelerator.
+
+Conventions shared with the device step:
+  * physical block 0 is the TRASH block — never allocated; masked-out
+    (invalid-lane) cache writes are pointed at it, and unallocated block-
+    table entries hold 0. Its contents are garbage by design and are never
+    read with non-zero attention weight (positions >= slot length are
+    masked before the softmax).
+  * a slot's window is max_blocks × block_size tokens; block tables are
+    dense int32 rows so they ship to the jit'd step as a plain [B, MB]
+    operand.
+
+Admission is conservative: `reserve()` claims the worst-case block count of
+a request (ceil((prompt + max_new) / block_size)) up front, so a request
+admitted under the policy can always extend its table mid-decode —
+`allocate()` after a successful reserve cannot fail. This trades a little
+pool headroom for never having to preempt a running request (the classic
+vLLM-style alternative); the scheduler in runtime.server layers the
+token-budget policy on top.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+TRASH_BLOCK = 0  # physical block 0: write sink for masked lanes, never allocated
+
+
+@dataclasses.dataclass
+class AllocatorStats:
+    num_blocks: int           # usable blocks (excludes the trash block)
+    in_use: int = 0
+    reserved: int = 0         # claimed by admitted requests, not yet allocated
+    peak_in_use: int = 0
+    total_allocs: int = 0
+    total_frees: int = 0
+
+    @property
+    def free(self) -> int:
+        return self.num_blocks - self.in_use
+
+    @property
+    def available(self) -> int:
+        """Blocks neither allocated nor promised to an admitted request."""
+        return self.num_blocks - self.in_use - self.reserved
+
+
+class BlockAllocator:
+    """Free-list allocator over physical KV blocks 1..num_blocks.
+
+    LIFO free list: freshly freed blocks are re-issued first, which is the
+    adversarial order for stale-contents bugs — a reused block still holds
+    the previous request's K/V until overwritten, so the equivalence soak
+    test exercises exactly the masking the paged step must get right.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 1:
+            raise ValueError("need at least 1 usable block beyond the trash "
+                             f"block, got num_blocks={num_blocks}")
+        # physical ids 1..num_blocks; 0 is the trash block
+        self._free: list[int] = list(range(num_blocks, 0, -1))
+        self.stats = AllocatorStats(num_blocks=num_blocks)
+
+    # -- admission-time reservation ----------------------------------------
+    def can_reserve(self, n: int) -> bool:
+        return n <= self.stats.available
+
+    def reserve(self, n: int) -> bool:
+        """Claim n blocks for a request without allocating them yet."""
+        if not self.can_reserve(n):
+            return False
+        self.stats.reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        assert self.stats.reserved >= n, (self.stats.reserved, n)
+        self.stats.reserved -= n
+
+    # -- allocation ---------------------------------------------------------
+    def allocate(self, n: int, *, reserved: bool = True) -> list[int]:
+        """Pop n physical block ids. With reserved=True (the server's path)
+        the blocks were claimed at admission, so exhaustion is a logic bug,
+        not an operating condition."""
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV block pool exhausted: want {n}, free {len(self._free)} "
+                f"(reserved {self.stats.reserved}) — admission policy must "
+                "reserve before allocating")
+        ids = [self._free.pop() for _ in range(n)]
+        if reserved:
+            self.unreserve(n)
+        self.stats.in_use += n
+        self.stats.total_allocs += n
+        self.stats.peak_in_use = max(self.stats.peak_in_use,
+                                     self.stats.in_use)
+        return ids
+
+    def free(self, ids: list[int]) -> None:
+        for b in ids:
+            assert b != TRASH_BLOCK, "freeing the trash block"
+            self._free.append(b)
+        self.stats.in_use -= len(ids)
+        self.stats.total_frees += len(ids)
+
+
+class SlotTables:
+    """Host-side block tables + lengths for a pool of serving slots."""
+
+    def __init__(self, n_slots: int, max_blocks: int, block_size: int):
+        self.block_size = block_size
+        self.max_blocks = max_blocks
+        self.tables = np.full((n_slots, max_blocks), TRASH_BLOCK, np.int32)
+        self.lens = np.zeros(n_slots, np.int32)      # tokens written per slot
+        self.n_alloc = np.zeros(n_slots, np.int32)   # blocks held per slot
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def grow(self, slot: int, new_len: int, alloc: BlockAllocator) -> None:
+        """Extend slot's table so positions [0, new_len) are backed."""
+        need = self.blocks_for(new_len)
+        have = int(self.n_alloc[slot])
+        if need > have:
+            ids = alloc.allocate(need - have)
+            self.tables[slot, have:need] = ids
+            self.n_alloc[slot] = need
+
+    def release(self, slot: int, alloc: BlockAllocator) -> None:
+        held = int(self.n_alloc[slot])
+        if held:
+            alloc.free([int(b) for b in self.tables[slot, :held]])
+        self.tables[slot, :] = TRASH_BLOCK
+        self.n_alloc[slot] = 0
+        self.lens[slot] = 0

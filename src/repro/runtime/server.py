@@ -1,18 +1,56 @@
-"""Slot-based batched serving loop (continuous-batching-lite).
+"""Continuous-batching serving loop: paged KV cache + chunked prefill.
 
-A fixed pool of B slots shares one batched KV cache. Requests are prefillled
-individually (jit'd per prompt-length bucket) and spliced into the batched
-cache at their slot; every step() advances all active slots with one jit'd
-decode_step. Greedy sampling; EOS/max-token retirement frees slots for
-queued requests — the standard production decode loop shape, minus RPC.
+Two engines share one Server front end (submit / step / run_until_drained):
 
-Per-slot position bookkeeping uses one shared `pos` when all slots advance
-together; slot-local lengths mask finished slots (their logits are computed
-but discarded — the usual padding-slot trade).
+* **paged** (`paged=True`, the production path): a physical pool of
+  fixed-size KV blocks shared by all slots, a free-list `BlockAllocator`
+  with conservative admission reservations (runtime.paging), and per-slot
+  block tables threaded through the model's attention reads/writes
+  (models.transformer.paged_step). Resident KV bytes scale with the tokens
+  actually cached, not n_slots × max_len. Prefill is CHUNKED through the
+  same jit'd step as decode — decode is just the C=1 compilation of the
+  unified step, and a mixed batch advances decode lanes (valid=1) inside a
+  prefill-chunk-wide call — so there are no per-prompt-bucket prefill jits
+  and no host-side cache splicing. A token-budget scheduler caps the new
+  tokens per step (decode lanes first — latency — then prompt chunks up to
+  the remaining budget). Per-request latency (TTFT, total) and server
+  throughput metrics are recorded as requests flow.
+
+* **slot-based** (`paged=False`, the legacy engine, kept as the
+  equivalence baseline): a monolithic [n_slots, max_len] cache; requests
+  prefill individually (jit'd per prompt-length bucket) and are spliced
+  into the batched cache; one shared `pos` clocks every slot. The paged
+  soak tests pin the paged engine's outputs against this path and against
+  one-request-at-a-time decode. NOTE the shared `pos` means slots admitted
+  at different depths attend over zero-K/V gap positions (softmax
+  dilution); the paged engine keeps true per-slot positions, so
+  equivalence with this path is exact only on depth-aligned schedules —
+  see tests/test_server_paged.py.
+
+Greedy sampling; EOS/max-token retirement frees slots (and, for the paged
+engine, their blocks — LIFO reuse, so stale block contents are exercised
+constantly) for queued requests. One deliberate semantic divergence: the
+legacy engine applies neither the max_new_tokens nor the eos_id check to
+the token emitted at prefill time (a max_new_tokens=1 request overshoots
+to 2 tokens there; an EOS first token keeps decoding); the paged engine
+checks both and retires immediately, matching one-request-at-a-time
+decode. Unservable requests (prompt ≥ max_len, or a
+worst-case block reservation larger than the whole pool) are rejected at
+submit() so they can never poison the queue.
+
+The bit-identity contracts above hold for FLOAT models (and for any fixed
+schedule). Under `cim.enabled` the engine's dynamic per-tensor act_scale
+(core.quant.act_scale — a global max over the batched activation tensor)
+couples every lane's quantization grid to the whole batch's content, so
+CIM-mode outputs depend on batch COMPOSITION — a pre-existing property of
+the seed slot engine that the paged engine inherits identically (both
+engines agree under the same schedule; different token budgets can differ
+on near-tie logits). Static calibrated scales are the production fix.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
 import jax
@@ -21,6 +59,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
+from repro.runtime.paging import BlockAllocator, SlotTables
 
 
 @dataclasses.dataclass
@@ -32,16 +71,58 @@ class Request:
     rid: int = -1
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # per-request latency metrics (monotonic timestamps)
+    t_submit: float = 0.0
+    t_first: float = 0.0     # first token emitted (prefill complete)
+    t_done: float = 0.0
+
+    @property
+    def ttft_s(self) -> float:
+        return max(self.t_first - self.t_submit, 0.0)
+
+    @property
+    def latency_s(self) -> float:
+        return max(self.t_done - self.t_submit, 0.0)
+
+
+@dataclasses.dataclass
+class ServerMetrics:
+    steps: int = 0
+    decode_tokens: int = 0    # tokens emitted by decode lanes
+    prefill_tokens: int = 0   # prompt tokens prefilled (either engine)
+    stalled_prefills: int = 0  # prefill lanes given 0 budget in a step
+    stalled_decodes: int = 0   # decode lanes dropped by the token budget
+    wall_s: float = 0.0       # time inside step() + admission-time prefill
+
+    def summary(self) -> dict:
+        w = max(self.wall_s, 1e-9)
+        return {"steps": self.steps,
+                "decode_tokens": self.decode_tokens,
+                "prefill_tokens": self.prefill_tokens,
+                "decode_tok_s": self.decode_tokens / w,
+                "prefill_tok_s": self.prefill_tokens / w,
+                "stalled_prefills": self.stalled_prefills,
+                "stalled_decodes": self.stalled_decodes,
+                "wall_s": self.wall_s}
 
 
 class Server:
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
-                 max_len: int, prequant: bool = False, packed: bool = True):
+                 max_len: int, prequant: bool = False, packed: bool = True,
+                 paged: bool = False, block_size: int = 16,
+                 num_blocks: int | None = None, prefill_chunk: int = 16,
+                 token_budget: int | None = None):
         """prequant=True re-encodes CIM-routed weights as offline-quantized
         stored codes before serving (models.quantize.quantize_params) —
         nibble-packed uint8 when `packed` (4 bits/weight at rest, the
-        SRAM-faithful format; 1/4 the bf16 weight HBM traffic per decode
-        step), else int8 containers. Requires cfg.cim.enabled."""
+        SRAM-faithful format), else int8 containers; composes with either
+        engine. paged=True selects the paged-KV engine (see module
+        docstring): `block_size` tokens per block, `num_blocks` usable
+        blocks in the pool (default: parity with the slot cache,
+        n_slots × max_len / block_size — size it smaller to realize the
+        paged memory win), `prefill_chunk` tokens per prompt chunk and
+        `token_budget` max new tokens per step (default: decode lanes +
+        one full prefill chunk)."""
         if prequant:
             assert cfg.cim.enabled, "prequant serving needs cim.enabled"
             from repro.models.quantize import quantize_params
@@ -51,28 +132,88 @@ class Server:
         self.n_slots = n_slots
         self.max_len = max_len
         self.mod = registry.get_module(cfg)
-        self.cache = jax.jit(
-            lambda: self.mod.init_cache(cfg, n_slots, max_len))()
+        self.paged = paged
         self.slot_req: list[Optional[Request]] = [None] * n_slots
-        self.slot_len = np.zeros(n_slots, np.int32)
         self.queue: list[Request] = []
         self._next_rid = 0
-        self._decode = jax.jit(
-            lambda p, t, c: self.mod.decode_step(p, t, c, cfg))
-        self._prefill = jax.jit(
-            lambda p, b: self.mod.prefill(p, b, cfg, max_len=max_len),
-            static_argnames=())
         self.steps_run = 0
+        self.metrics = ServerMetrics()
+
+        if paged:
+            if not (hasattr(self.mod, "paged_step")
+                    and self.mod.supports_paged(cfg)):
+                raise NotImplementedError(
+                    f"paged serving not supported for arch {cfg.arch!r}")
+            if max_len % block_size:
+                raise ValueError("max_len must be a multiple of block_size")
+            self.block_size = block_size
+            max_blocks = max_len // block_size
+            if num_blocks is None:
+                num_blocks = n_slots * max_blocks
+            self.alloc = BlockAllocator(num_blocks)
+            self.tables = SlotTables(n_slots, max_blocks, block_size)
+            if prefill_chunk < 1:
+                raise ValueError("prefill_chunk must be >= 1")
+            self.prefill_chunk = prefill_chunk
+            self.token_budget = token_budget if token_budget is not None \
+                else n_slots + prefill_chunk
+            if self.token_budget < 1:
+                raise ValueError("token_budget must be >= 1 (a 0 budget "
+                                 "would step forever without progress)")
+            # pool holds num_blocks usable blocks + the trash block (id 0)
+            self.cache = jax.jit(
+                lambda: self.mod.init_paged_cache(cfg, num_blocks + 1,
+                                                  block_size))()
+            self._pstep = jax.jit(
+                lambda p, t, c, tb, ln, vd:
+                    self.mod.paged_step(p, t, c, tb, ln, vd, cfg))
+            self._reserved: dict[int, int] = {}   # slot → blocks reserved
+            self._pf_done = np.zeros(n_slots, np.int64)  # prompt tokens fed
+            self._rr = 0   # round-robin offset for budget-capped decode
+        else:
+            self.slot_len = np.zeros(n_slots, np.int32)
+            self.cache = jax.jit(
+                lambda: self.mod.init_cache(cfg, n_slots, max_len))()
+            self._decode = jax.jit(
+                lambda p, t, c: self.mod.decode_step(p, t, c, cfg))
+            self._prefill = jax.jit(
+                lambda p, b: self.mod.prefill(p, b, cfg, max_len=max_len),
+                static_argnames=())
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request) -> int:
+        # reject unservable requests BEFORE queueing: a poison request at
+        # the queue head would otherwise either block admission forever
+        # (worst-case reservation larger than the whole pool —
+        # run_until_drained would spin) or crash mid-serve and strand the
+        # in-flight requests.
+        if not req.prompt:
+            raise ValueError("empty prompt")
+        if self.paged:
+            if len(req.prompt) >= self.max_len - 1:
+                raise ValueError(
+                    f"prompt of {len(req.prompt)} tokens exceeds "
+                    f"max_len={self.max_len}")
+            need = self._blocks_worst_case(req)
+            if need > self.alloc.stats.num_blocks:
+                raise ValueError(
+                    f"request needs {need} KV blocks worst-case but the "
+                    f"pool only has {self.alloc.stats.num_blocks}")
         req.rid = self._next_rid
+        req.t_submit = time.monotonic()
         self._next_rid += 1
         self.queue.append(req)
+        # admission work (incl. the legacy engine's per-request prefill)
+        # counts toward wall_s so both engines' tok/s share one clock
+        t0 = time.monotonic()
         self._admit()
+        self.metrics.wall_s += time.monotonic() - t0
         return req.rid
 
     def _admit(self):
+        if self.paged:
+            self._admit_paged()
+            return
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.pop(0)
@@ -84,13 +225,24 @@ class Server:
         logits, rcache = self._prefill(self.params, batch)
         first = int(jnp.argmax(logits[0]))
         req.output.append(first)
+        req.t_first = time.monotonic()
+        self.metrics.prefill_tokens += len(req.prompt)
         self.slot_req[slot] = req
         self.slot_len[slot] = len(req.prompt)
         self.cache = _splice(self.cache, rcache, slot)
 
     # -- decode loop ----------------------------------------------------------
     def step(self):
-        """One decode step for all slots; retire finished requests."""
+        """One serving step; retires finished requests and re-admits."""
+        t0 = time.monotonic()
+        if self.paged:
+            self._step_paged()
+        else:
+            self._step_slots()
+        self.metrics.wall_s += time.monotonic() - t0
+
+    def _step_slots(self):
+        """Legacy engine: one decode step for all slots."""
         active = [s for s in range(self.n_slots) if self.slot_req[s]]
         if not active:
             return
@@ -107,20 +259,155 @@ class Server:
         for s in active:
             req = self.slot_req[s]
             req.output.append(int(nxt[s]))
+            self.metrics.decode_tokens += 1
             exhausted = len(req.output) >= req.max_new_tokens
             hit_eos = req.eos_id is not None and int(nxt[s]) == req.eos_id
             if exhausted or hit_eos or pos + 1 >= self.max_len - 1:
                 req.done = True
+                req.t_done = time.monotonic()
                 self.slot_req[s] = None
                 self.slot_len[s] = 0
         self.steps_run += 1
+        self.metrics.steps += 1
         self._admit()
+
+    # -- paged engine ---------------------------------------------------------
+    def _blocks_worst_case(self, req: Request) -> int:
+        """Conservative reservation: every token the request may ever cache
+        (prompt + generated, the final sampled token is never written)."""
+        need = min(len(req.prompt) + req.max_new_tokens, self.max_len)
+        return self.tables.blocks_for(need)
+
+    def _admit_paged(self):
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]  # pre-validated by submit()
+            need = self._blocks_worst_case(req)
+            if not self.alloc.reserve(need):
+                return  # head-of-line blocks until the pool drains
+            self.queue.pop(0)
+            self.slot_req[slot] = req
+            self._reserved[slot] = need
+            self._pf_done[slot] = 0
+
+    def _step_paged(self):
+        active = [s for s in range(self.n_slots) if self.slot_req[s]]
+        if not active:
+            return
+        prefilling = [s for s in active
+                      if self._pf_done[s] < len(self.slot_req[s].prompt)]
+        budget = self.token_budget
+        # decode lanes first (latency-critical, 1 token each). Under the
+        # current policy decode lanes can never exceed the budget — a lane
+        # only becomes decode by completing prefill, which itself needs
+        # budget, so #decode lanes ≤ token_budget is invariant (pinned by
+        # tests). The rotation + stall counter below are future-proofing
+        # for policies that break it (preemption, admission bursts): if
+        # lanes are ever dropped, no slot starves deterministically and
+        # the drops are visible in metrics.
+        cands = [s for s in active if s not in prefilling]
+        if cands:
+            rot = self._rr % len(cands)
+            cands = cands[rot:] + cands[:rot]
+        self._rr += 1
+        decode_lanes = cands[:budget]
+        self.metrics.stalled_decodes += len(cands) - len(decode_lanes)
+        budget -= len(decode_lanes)
+        # ... then prompt chunks from the remaining token budget
+        takes: dict[int, int] = {}
+        for s in prefilling:
+            req = self.slot_req[s]
+            take = min(len(req.prompt) - int(self._pf_done[s]),
+                       self.prefill_chunk, budget)
+            if take <= 0:
+                self.metrics.stalled_prefills += 1
+                continue
+            takes[s] = take
+            budget -= take
+        # steps whose prefill lanes are all budget-starved run the cheap
+        # C=1 decode compilation, not a chunk-wide call for 1-token lanes
+        c = self.prefill_chunk if takes else 1
+        toks = np.zeros((self.n_slots, c), np.int32)
+        valid = np.zeros(self.n_slots, np.int32)
+        for s in decode_lanes:
+            toks[s, 0] = self.slot_req[s].output[-1]
+            valid[s] = 1
+        for s, take in takes.items():
+            done = int(self._pf_done[s])
+            toks[s, :take] = self.slot_req[s].prompt[done:done + take]
+            valid[s] = take
+        # back every position this step writes (reserved ⇒ cannot fail)
+        for s in active:
+            if valid[s]:
+                self.tables.grow(s, int(self.tables.lens[s]) + int(valid[s]),
+                                 self.alloc)
+        logits, self.cache = self._pstep(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self.tables.tables), jnp.asarray(self.tables.lens),
+            jnp.asarray(valid))
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        now = time.monotonic()
+        for s in active:
+            if not valid[s]:
+                continue
+            req = self.slot_req[s]
+            self.tables.lens[s] += int(valid[s])
+            if s in prefilling:
+                self._pf_done[s] += int(valid[s])
+                self.metrics.prefill_tokens += int(valid[s])
+                if self._pf_done[s] == len(req.prompt):
+                    req.output.append(int(nxt[s]))   # first generated token
+                    req.t_first = now
+                    # one-at-a-time semantics: exhaustion AND EOS apply to
+                    # the prefill-emitted token too (the legacy engine
+                    # checks neither here — see the module docstring)
+                    if (len(req.output) >= req.max_new_tokens
+                            or (req.eos_id is not None
+                                and req.output[-1] == req.eos_id)):
+                        self._retire_paged(s, now)
+                continue
+            req.output.append(int(nxt[s]))
+            self.metrics.decode_tokens += 1
+            exhausted = len(req.output) >= req.max_new_tokens
+            hit_eos = req.eos_id is not None and int(nxt[s]) == req.eos_id
+            full = int(self.tables.lens[s]) + 1 >= self.max_len - 1
+            if exhausted or hit_eos or full:
+                self._retire_paged(s, now)
+        self.steps_run += 1
+        self.metrics.steps += 1
+        self._admit()
+
+    def _retire_paged(self, slot: int, now: float):
+        req = self.slot_req[slot]
+        req.done = True
+        req.t_done = now
+        leftover = self._reserved.pop(slot) - int(self.tables.n_alloc[slot])
+        if leftover > 0:
+            self.alloc.unreserve(leftover)
+        self.tables.release(slot, self.alloc)
+        self.slot_req[slot] = None
 
     def run_until_drained(self, max_steps: int = 10_000):
         while any(self.slot_req) or self.queue:
             self.step()
             if self.steps_run > max_steps:
                 raise RuntimeError("serving loop did not drain")
+
+    # -- capacity / reporting -------------------------------------------------
+    def kv_cache_bytes(self) -> dict:
+        """Resident KV bytes: {"total": pool/cache footprint, "in_use":
+        bytes of blocks actually allocated (== total for the slot cache —
+        the number the paged engine exists to shrink)}."""
+        leaves = jax.tree_util.tree_leaves(self.cache)
+        total = int(sum(a.nbytes for a in leaves
+                        if hasattr(a, "nbytes") and a.ndim > 0))
+        if not self.paged:
+            return {"total": total, "in_use": total}
+        nb = self.alloc.stats.num_blocks + 1     # pool includes trash block
+        per_block = total // nb
+        return {"total": total,
+                "in_use": per_block * self.alloc.stats.in_use}
 
 
 def _splice(batched_cache, request_cache, slot: int):

@@ -20,6 +20,11 @@ def _doc(us_decode=400.0, ratio=1.02):
             {"name": "decode_packed_m8_k576_n128", "us": us_decode,
              "derived": "unpacked_us=500.0|w_bytes 73728->36864 "
                         "(2.00x less HBM)"},
+            {"name": "serve_decode_paged_s4_r4", "us": 90000.0,
+             "derived": "decode_tok_s=11.0|prefill_tok_s=30.4|steps=6"},
+            {"name": "serve_kv_bytes_occ25_s4", "us": 1000.0,
+             "derived": "kv_bytes slot=262144 paged=16384 "
+                        "(16.00x less HBM)"},
         ],
     }
 
@@ -33,6 +38,11 @@ def test_extract_metrics():
     assert m["sigma_ratio"] == pytest.approx(1.02)
     assert m["noisy_us"] == 700.0
     assert m["ref_us"] == 120.0
+    # schema-v2 serving sweep rows
+    assert m["serve_decode_tok_s"] == pytest.approx(11.0)
+    assert m["kv_bytes_slot"] == 262144
+    assert m["kv_bytes_paged"] == 16384
+    assert m["kv_win"] == pytest.approx(16.0)
 
 
 def test_extract_metrics_tolerates_missing_rows():
@@ -66,9 +76,9 @@ def test_history_append_and_render(tmp_path):
     assert "run-a" in md and "run-b" in md
     assert "20000" in md    # 8 tok / 400 µs
     assert "2.00×" in md and "36864" in md
-    # table stays well-formed: every data row has the 6 columns
+    # table stays well-formed: every data row has the 9 columns
     rows = [ln for ln in md.splitlines() if ln.startswith("| run-")]
-    assert all(ln.count("|") == 7 for ln in rows)
+    assert all(ln.count("|") == 10 for ln in rows)
 
 
 def test_one_shot_mode(tmp_path):

@@ -146,3 +146,85 @@ def test_moe_a2a_decode_and_packed_experts():
                           capture_output=True, text=True, timeout=600)
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "MOE_A2A_DECODE_OK" in proc.stdout
+
+
+SCRIPT_NON_DIVISIBLE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=6"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.cim_matmul import CIMConfig
+from repro.models import moe
+from repro.models.quantize import quantize_params
+from repro.parallel import sharding
+from repro.launch.mesh import make_host_mesh
+
+cfg = ModelConfig(arch="t", family="moe", n_layers=2, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=16, vocab=64, dtype="float32",
+                  moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=16,
+                                capacity_factor=8.0))
+key = jax.random.PRNGKey(0)
+p = moe.init(key, cfg)
+x = jax.random.normal(jax.random.fold_in(key, 1), (4, 8, 32))
+
+sharding.set_mesh(None)
+y_local, aux_local = moe.apply(p, x, cfg, train=False)
+
+# model axis of 3 does NOT divide the 16 padded experts -> apply() takes the
+# LOCAL fallback branch even though a mesh is active: every device computes
+# the full expert set under plain GSPMD (no EP shard_map).
+mesh = make_host_mesh(2, 3)
+assert moe.padded_experts(cfg.moe.n_experts) % mesh.shape["model"] != 0
+sharding.set_mesh(mesh)
+with mesh:
+    y_mesh, aux_mesh = jax.jit(
+        lambda pp, xx: moe.apply(pp, xx, cfg, train=False))(p, x)
+np.testing.assert_allclose(np.asarray(y_mesh), np.asarray(y_local),
+                           rtol=2e-5, atol=2e-5)
+np.testing.assert_allclose(float(aux_mesh), float(aux_local), rtol=1e-5)
+
+# CURRENT (pinned) semantics: outputs replicate across the whole mesh —
+# the expert compute is NOT expert-parallel in this fallback. The ROADMAP
+# open item tracks sharding it; when that lands, this pin must be updated.
+from jax.sharding import NamedSharding, PartitionSpec as P
+sh = y_mesh.sharding
+assert sh.is_fully_replicated, f"fallback output unexpectedly sharded: {sh}"
+
+# CIM prequant packed experts under the same fallback: _expert_ffn vmaps
+# the engine entry point over the expert axis, so the _under_vmap guard
+# must keep auto backend selection OFF the shard_map dispatch (a shard_map
+# cannot nest under vmap). Pin: it compiles, runs, and agrees with the
+# no-mesh packed reference.
+cfg_cim = dataclasses.replace(cfg, cim=CIMConfig(enabled=True))
+pq = quantize_params(p, cfg_cim, packed=True)
+sharding.set_mesh(None)
+yq_local, _ = moe.apply(pq, x, cfg_cim, train=False)
+sharding.set_mesh(mesh)
+with mesh:
+    yq_mesh, _ = jax.jit(
+        lambda pp, xx: moe.apply(pp, xx, cfg_cim, train=False))(pq, x)
+np.testing.assert_allclose(np.asarray(yq_mesh), np.asarray(yq_local),
+                           rtol=2e-5, atol=2e-5)
+print("MOE_NON_DIVISIBLE_OK")
+"""
+
+
+@pytest.mark.slow
+def test_moe_non_divisible_experts_local_fallback():
+    """ROADMAP open item, pinned as a regression baseline: a mesh whose
+    model axis (3) cannot divide the padded experts (16) falls back to the
+    local MoE path under GSPMD — outputs match the no-mesh reference but
+    replicate across devices (unsharded expert compute), and the
+    `_under_vmap` guard keeps the vmapped CIM expert kernels off the
+    shard_map dispatch. When the eventual fix shards this path, the
+    replication assertion here is the contract to update."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_FORCE_JNP", None)
+    proc = subprocess.run([sys.executable, "-c", SCRIPT_NON_DIVISIBLE],
+                          env=env, capture_output=True, text=True,
+                          timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MOE_NON_DIVISIBLE_OK" in proc.stdout

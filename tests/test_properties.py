@@ -1,0 +1,157 @@
+"""Property-based engine invariants over random shapes (hypothesis).
+
+Runs with real `hypothesis` when installed (the CI tests-full / coverage
+jobs), falling back to the deterministic conftest mini-stub otherwise —
+strategies here deliberately stay inside the stub's surface (integers /
+floats / lists). Properties pinned:
+
+  * pack_codes / unpack_codes round-trip over random (K, N) incl. odd K and
+    stacked leading dims (layers / experts);
+  * packed_col_sums == the Eq. 7 ΣW̃ of the unpacked codes, exactly;
+  * per-channel weight scales: shape contract [..., 1, M], bit-exact
+    equivalence with per-matrix scales when every column shares one range,
+    and prequant-path agreement between the two scale layouts;
+  * salt_seed: salt 0 is the identity, distinct salts produce distinct
+    effective seeds (decorrelated converter instances), int32 closure.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cim_matmul import CIMConfig, cim_matmul_prequant, \
+    quantize_weight_offline
+from repro.kernels.ops import (pack_codes, packed_col_sums, salt_seed,
+                               unpack_codes)
+
+_SET = dict(max_examples=25, deadline=None)
+
+
+def _codes(seed: int, *shape: int) -> np.ndarray:
+    return np.random.RandomState(seed).randint(
+        0, 16, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack round-trips
+# ---------------------------------------------------------------------------
+@settings(**_SET)
+@given(st.integers(1, 65), st.integers(1, 24), st.integers(0, 2**16))
+def test_pack_unpack_roundtrip(k, n, seed):
+    w = _codes(seed, k, n)
+    packed = pack_codes(jnp.asarray(w))
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == ((k + 1) // 2, n)
+    back = np.asarray(unpack_codes(packed, k))
+    np.testing.assert_array_equal(back, w)
+    # without the trim arg, odd K exposes the zero pack-padding row
+    full = np.asarray(unpack_codes(packed))
+    assert full.shape[0] == 2 * ((k + 1) // 2)
+    if k % 2:
+        np.testing.assert_array_equal(full[-1], np.zeros(n))
+
+
+@settings(**_SET)
+@given(st.integers(1, 4), st.integers(1, 33), st.integers(1, 8),
+       st.integers(0, 2**16))
+def test_pack_roundtrip_stacked_leading_dims(lead, k, n, seed):
+    """Stacked layers / experts [L, K, N] pass through pack untouched."""
+    w = _codes(seed, lead, k, n)
+    packed = pack_codes(jnp.asarray(w))
+    assert packed.shape == (lead, (k + 1) // 2, n)
+    np.testing.assert_array_equal(np.asarray(unpack_codes(packed, k)), w)
+
+
+@settings(**_SET)
+@given(st.integers(1, 65), st.integers(1, 24), st.integers(0, 2**16))
+def test_packed_col_sums_matches_unpacked(k, n, seed):
+    """Eq. 7 ΣW̃ straight from the packed bytes — exact, incl. odd-K
+    pack-padding rows (zero codes are no-ops in the sum)."""
+    w = _codes(seed, k, n)
+    packed = pack_codes(jnp.asarray(w))
+    np.testing.assert_array_equal(np.asarray(packed_col_sums(packed)),
+                                  w.sum(axis=0))
+
+
+# ---------------------------------------------------------------------------
+# per-channel weight scales
+# ---------------------------------------------------------------------------
+@settings(**_SET)
+@given(st.integers(2, 40), st.integers(1, 12), st.integers(0, 2**16))
+def test_per_channel_scale_shape_and_broadcast(k, m, seed):
+    rng = np.random.RandomState(seed)
+    w = jnp.asarray(rng.randn(k, m).astype(np.float32))
+    cfg = CIMConfig(enabled=True)
+    cfg_pc = dataclasses.replace(
+        cfg, weight=dataclasses.replace(cfg.weight, per_channel=True))
+    codes, s_w = quantize_weight_offline(w, cfg_pc)
+    assert s_w.shape == (1, m)          # [..., 1, M] broadcast contract
+    assert codes.shape == (k, m) and codes.dtype == jnp.int8
+    # offset-encoded codes (Eq. 7: W̃ = q + 8) dequantize back to within one
+    # scale step of the float weight, per channel
+    deq = (np.asarray(codes, np.float32)
+           - cfg_pc.weight.offset) * np.asarray(s_w)
+    assert np.all(np.abs(deq - np.asarray(w)) <= np.asarray(s_w) + 1e-7)
+
+
+@settings(**_SET)
+@given(st.integers(2, 24), st.integers(1, 8), st.integers(0, 2**16),
+       st.floats(0.1, 4.0))
+def test_per_channel_equals_per_matrix_on_shared_range(k, m, seed, amp):
+    """When every output channel spans the same range the per-channel grid
+    degenerates to the per-matrix one — outputs must agree bit-for-bit
+    through the full prequant pipeline."""
+    rng = np.random.RandomState(seed)
+    w = rng.randn(k, m).astype(np.float32)
+    # rescale every column to the same |max| so both layouts pick one scale
+    # (x / amax(x) puts each column's extreme element at exactly ±1.0)
+    w = w / np.max(np.abs(w), axis=0, keepdims=True) * np.float32(amp)
+    w = jnp.asarray(w)
+    x = jnp.asarray(rng.randn(3, k).astype(np.float32))
+    cfg = CIMConfig(enabled=True, backend="einsum")
+    cfg_pc = dataclasses.replace(
+        cfg, weight=dataclasses.replace(cfg.weight, per_channel=True))
+    codes_m, s_m = quantize_weight_offline(w, cfg)
+    codes_c, s_c = quantize_weight_offline(w, cfg_pc)
+    np.testing.assert_array_equal(np.asarray(codes_m), np.asarray(codes_c))
+    y_m = cim_matmul_prequant(x, codes_m, s_m, cfg)
+    y_c = cim_matmul_prequant(x, codes_c, s_c, cfg_pc)
+    np.testing.assert_array_equal(np.asarray(y_m), np.asarray(y_c))
+
+
+# ---------------------------------------------------------------------------
+# salt_seed contract
+# ---------------------------------------------------------------------------
+@settings(**_SET)
+@given(st.integers(-2**31, 2**31 - 1))
+def test_salt_zero_is_identity(seed):
+    assert int(salt_seed(seed, 0)) == seed
+
+
+@settings(**_SET)
+@given(st.integers(-2**31, 2**31 - 1), st.integers(0, 1023),
+       st.integers(0, 1023))
+def test_distinct_salts_decorrelate(seed, a, b):
+    """Distinct salts must name distinct converter instances: the XOR with
+    the golden-ratio-scrambled salt is injective over the shard/layer salt
+    range, so effective seeds never collide (and stay int32)."""
+    sa, sb = salt_seed(seed, a), salt_seed(seed, b)
+    assert sa.dtype == jnp.int32 and sb.dtype == jnp.int32
+    if a != b:
+        assert int(sa) != int(sb)
+    else:
+        assert int(sa) == int(sb)
+
+
+@settings(**_SET)
+@given(st.integers(-2**31, 2**31 - 1), st.integers(1, 2**31 - 1))
+def test_salt_matches_traced_python_parity(seed, salt):
+    """Python-int salts and traced int32 salts fold identically (the static
+    inl_seed salt vs the engine's traced axis_index salt)."""
+    static = salt_seed(seed, salt)
+    traced = jax.jit(salt_seed)(jnp.int32(seed),
+                                jnp.asarray(salt & 0x7FFFFFFF, jnp.int32))
+    assert int(static) == int(traced)
