@@ -3,10 +3,14 @@ reference across tile shapes (structural check — real perf is a TPU matter,
 the §Perf roofline reasons from the lowered IR), a packed-vs-unpacked
 decode-shape sweep quantifying the nibble-packing HBM win, a stochastic
 (NOISY) fused-kernel sweep checking the in-kernel PRNG's distributional
-agreement with the einsum reference, and a SERVING sweep driving the
-runtime.server engines (paged vs slot cache) over concurrent requests with
-mixed prompt lengths — decode tok/s plus the resident KV-cache bytes at
-25 % slot occupancy (the paged-pool memory win).
+agreement with the einsum reference, a PAGED-ATTENTION sweep (schema v3:
+the Pallas flash kernel vs the exact window-softmax reference across
+window lengths, with the peak score-tensor byte probe — exact grows as
+O(W), the kernel's live scores stay one O(block) tile), and a SERVING
+sweep driving the runtime.server engines (paged vs slot cache, plus the
+paged engine on the kernel attention backend) over concurrent requests
+with mixed prompt lengths — decode tok/s plus the resident KV-cache bytes
+at 25 % slot occupancy (the paged-pool memory win).
 
 CLI (the CI bench-smoke job):
     PYTHONPATH=src python -m benchmarks.kernel_bench --small \\
@@ -28,7 +32,7 @@ from repro.kernels.ref import cim_mvm_ref
 
 from .common import row, timeit
 
-BENCH_SCHEMA = "pico-ram/kernel_bench/v2"  # v2: + serve_* serving-sweep rows
+BENCH_SCHEMA = "pico-ram/kernel_bench/v3"  # v3: + paged-attention sweep
 
 
 def run(small: bool = False):
@@ -55,7 +59,57 @@ def run(small: bool = False):
                        f"interpret_mode|vs_ref={us / max(us_ref, 1e-9):.2f}x"))
     out += run_noisy_sweep(small)
     out += run_packed_sweep(small)
+    out += run_paged_attention_sweep(small)
     out += run_serving_sweep(small)
+    return out
+
+
+def run_paged_attention_sweep(small: bool = False):
+    """Pallas paged-attention kernel vs the exact window-softmax reference.
+
+    Decode-shaped (C=1) attention over a paged block pool through per-slot
+    block tables, swept over window lengths. Two numbers per window:
+
+      * wall µs, kernel vs exact (interpret-mode on CPU CI — a structural
+        trend like the other kernel rows);
+      * the peak score-tensor bytes — the memory probe the kernel exists
+        for. The exact path materializes the [B, C, KH, G, W] score tensor
+        (grows linearly with the window); the kernel's live scores are one
+        [C·G, block_size] VMEM tile per program, CONSTANT in W. Exact
+        byte counts, platform-free.
+    """
+    from repro.kernels.paged_attention import get_attn_backend
+    out = []
+    b, kh, g, dh, bs = 2, 2, 2, 32, 8
+    windows = (64, 256) if small else (256, 1024, 4096)
+    key = jax.random.PRNGKey(5)
+    for w in windows:
+        mb = w // bs
+        nb = b * mb + 1              # every slot fully backed + trash block
+        q = jax.random.normal(key, (b, 1, kh * g, dh), jnp.float32)
+        kp = jax.random.normal(jax.random.fold_in(key, w),
+                               (nb, bs, kh, dh), jnp.float32)
+        vp = jax.random.normal(jax.random.fold_in(key, w + 1),
+                               (nb, bs, kh, dh), jnp.float32)
+        tables = (1 + jnp.arange(b * mb, dtype=jnp.int32)).reshape(b, mb)
+        lens = jnp.full((b,), w - 1, jnp.int32)     # full-depth decode
+        positions = lens[:, None]
+        kvl = lens + 1
+
+        def run_backend(name):
+            fn = get_attn_backend(name).fn
+            return jax.jit(lambda q, k, v: fn(q, k, v, tables, positions,
+                                              kvl))
+
+        us_e = timeit(run_backend("exact"), q, kp, vp)
+        us_k = timeit(run_backend("kernel"), q, kp, vp)
+        bytes_exact = b * 1 * kh * g * w * 4
+        bytes_kernel = 1 * g * bs * 4
+        out.append(row(
+            f"paged_attn_decode_w{w}", us_k,
+            f"exact_us={us_e:.1f}|score_bytes exact={bytes_exact} "
+            f"kernel={bytes_kernel} "
+            f"({bytes_exact / bytes_kernel:.0f}x less)"))
     return out
 
 
@@ -126,7 +180,9 @@ def run_serving_sweep(small: bool = False):
     both runtime.server engines on the smoke transformer. Reported:
 
       * decode tok/s per engine (interpret/CPU wall clock — a structural
-        trend like the kernel rows, not TPU absolute perf);
+        trend like the kernel rows, not TPU absolute perf); the paged
+        engine is drained twice, once per attention backend, so the
+        kernel-vs-exact serving ratio lands in the artifact;
       * resident KV-cache bytes at 25 % slot occupancy: the slot cache
         always holds n_slots × max_len positions, the paged pool only the
         blocks its admitted requests actually cached — the exact byte
@@ -148,16 +204,20 @@ def run_serving_sweep(small: bool = False):
     plens = [int(rng.randint(3, max_len // 4)) for _ in range(n_req)]
     prompts = [rng.randint(0, cfg.vocab, size=p).tolist() for p in plens]
 
-    def drain(paged: bool) -> Server:
+    def drain(paged: bool, attn: str = "exact") -> Server:
+        # attention backend pinned explicitly so each row's meaning is
+        # stable across PRs (auto re-resolving would silently rebase the
+        # paged trend onto the kernel path)
         srv = Server(params, cfg, n_slots=n_slots, max_len=max_len,
                      paged=paged, block_size=block,
-                     prefill_chunk=max_len // 8)
+                     prefill_chunk=max_len // 8, attn=attn)
         for p in prompts:
             srv.submit(Request(prompt=list(p), max_new_tokens=max_new))
         srv.run_until_drained()
         return srv
 
     slot_bytes = 0
+    exact_tok_s = 0.0
     for paged in (False, True):
         srv = drain(paged)
         m = srv.metrics.summary()
@@ -169,6 +229,19 @@ def run_serving_sweep(small: bool = False):
             f"prefill_tok_s={m['prefill_tok_s']:.1f}|steps={m['steps']}"))
         if not paged:
             slot_bytes = srv.kv_cache_bytes()["total"]
+        else:
+            exact_tok_s = m["decode_tok_s"]
+
+    # the same paged drain on the Pallas attention kernel: the serving-level
+    # kernel-vs-exact decode tok/s the acceptance criteria track
+    srv = drain(True, attn="kernel")
+    m = srv.metrics.summary()
+    us_per_tok = m["wall_s"] * 1e6 / max(m["decode_tokens"], 1)
+    out.append(row(
+        f"serve_decode_paged_attnkernel_s{n_slots}_r{n_req}", us_per_tok,
+        f"decode_tok_s={m['decode_tok_s']:.1f}|"
+        f"exact_tok_s={exact_tok_s:.1f}|"
+        f"ratio={m['decode_tok_s'] / max(exact_tok_s, 1e-9):.3f}"))
 
     # KV residency at 25 % slot occupancy: drain ceil(slots/4) requests
     # through the paged engine and report its PEAK block residency (robust

@@ -28,7 +28,13 @@ Tracked columns (parsed from the bench rows; missing rows render as "—"):
   * (schema v2) the serving sweep: paged-engine decode tok/s from the
     end-to-end runtime.server drain, and the resident KV-cache bytes at
     25 % slot occupancy — paged pool vs the monolithic slot cache, with the
-    ×-less-HBM factor (exact byte counts, platform-free).
+    ×-less-HBM factor (exact byte counts, platform-free);
+  * (schema v3) the paged-attention sweep: the paged engine drained on the
+    Pallas flash attention backend (kernel decode tok/s next to the exact
+    backend's), and the peak score-tensor bytes of the LARGEST swept
+    window — exact materializes [B, C, KH, G, W] (O(W)), the kernel keeps
+    one [C·G, block] tile (O(block)); the ×-less factor is the memory
+    probe the acceptance criteria pin.
 """
 from __future__ import annotations
 
@@ -72,10 +78,25 @@ def extract_metrics(doc: dict) -> dict:
                 out["sigma_ratio"] = float(sr.group(1))
         if name.startswith("kernel_ref_jnp"):
             out["ref_us"] = us
-        if name.startswith("serve_decode_paged"):
+        if name.startswith("serve_decode_paged_attnkernel"):
+            sd = re.search(r"decode_tok_s=([\d.]+)", derived)
+            if sd:
+                out["attn_kernel_tok_s"] = float(sd.group(1))
+        elif name.startswith("serve_decode_paged"):
             sd = re.search(r"decode_tok_s=([\d.]+)", derived)
             if sd:
                 out["serve_decode_tok_s"] = float(sd.group(1))
+        m3 = re.match(r"paged_attn_decode_w(\d+)", name)
+        if m3:
+            w = int(m3.group(1))
+            sb = re.search(
+                r"score_bytes\s+exact=(\d+)\s+kernel=(\d+)\s+\((\d+)x",
+                derived)
+            if sb and w >= out.get("score_window", 0):
+                out["score_window"] = w
+                out["score_bytes_exact"] = int(sb.group(1))
+                out["score_bytes_kernel"] = int(sb.group(2))
+                out["score_win"] = float(sb.group(3))
         if name.startswith("serve_kv_bytes_occ25"):
             kb = re.search(
                 r"kv_bytes\s+slot=(\d+)\s+paged=(\d+)\s+\(([\d.]+)x", derived)
@@ -126,14 +147,15 @@ def render_markdown(entries: list[dict]) -> str:
         "perf. Byte counts and the σ ratio are platform-free.",
         "",
         "| run | decode tok/s | packed weight HBM B | vs int8 | "
-        "fused σ ratio | fused noisy µs | serve tok/s | paged KV B @25% | "
-        "vs slot |",
-        "|---|---|---|---|---|---|---|---|---|",
+        "fused σ ratio | fused noisy µs | serve tok/s | attn-kernel tok/s | "
+        "paged KV B @25% | vs slot | score B (kernel) | vs exact |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         m = e.get("metrics", {})
         lines.append(
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} |".format(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |"
+            .format(
                 str(e.get("label", "?"))[:24],
                 _fmt(m.get("decode_tok_s"), "{:.0f}"),
                 _fmt(m.get("w_bytes_packed"), "{:d}"),
@@ -141,13 +163,21 @@ def render_markdown(entries: list[dict]) -> str:
                 _fmt(m.get("sigma_ratio")),
                 _fmt(m.get("noisy_us"), "{:.1f}"),
                 _fmt(m.get("serve_decode_tok_s"), "{:.1f}"),
+                _fmt(m.get("attn_kernel_tok_s"), "{:.1f}"),
                 _fmt(m.get("kv_bytes_paged"), "{:d}"),
                 _fmt(m.get("kv_win"), "{:.2f}×"),
+                _fmt(m.get("score_bytes_kernel"), "{:d}"),
+                _fmt(m.get("score_win"), "{:.0f}×"),
             ))
     shapes = {e.get("metrics", {}).get("decode_shape") for e in entries}
     shapes.discard(None)
     if shapes:
         lines += ["", f"decode shape(s): {', '.join(sorted(shapes))}"]
+    windows = {e.get("metrics", {}).get("score_window") for e in entries}
+    windows.discard(None)
+    if windows:
+        lines += ["", "score-tensor probe window(s): "
+                  + ", ".join(str(w) for w in sorted(windows))]
     lines.append("")
     return "\n".join(lines)
 

@@ -1,0 +1,83 @@
+"""Static activation-scale calibration for CIM serving.
+
+The dynamic per-tensor act_scale (core.quant) takes a global max over the
+batched activation tensor, so every lane's 4-bit DAC grid depends on what
+else shares the batch — CIM-mode serving outputs change with batch
+COMPOSITION (the coupling documented in runtime/server.py since PR 4). The
+hardware has no such coupling: the paper's input interface is a fixed
+charge-domain C-DAC reference (cf. the P-8T macro's low-cost DAC,
+arXiv:2211.16008), i.e. a CALIBRATED STATIC grid.
+
+This module is the calibration half of that fix:
+
+    tokens = jnp.asarray([[...prompt...]], jnp.int32)
+    cal = calibrate_act_scale(params, tokens, cfg)
+    server = Server(params, cfg, ..., act_scale=cal["scale"])
+
+`collect_act_spans` runs one EAGER forward (layer scan unrolled so values
+are concrete) with a recorder hooked into core.quant.act_scale and returns
+the per-matmul activation spans in call order — one entry per CIM-routed
+matmul, i.e. the per-layer amax profile. `calibrate_act_scale` reduces the
+profile to a single static scale (max span / qmax, optionally a percentile
+over call sites) — one fixed DAC grid for the whole model, matching the
+macro's single analog reference. Per-call-site static scales are a
+follow-up (they need per-layer plumbing through the params tree).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def _calibration_cfg(cfg):
+    """The config the calibration forward runs under: CIM enabled with the
+    DYNAMIC scale (that is what is being measured), deterministic einsum
+    backend (cheap in eager mode), layer scan unrolled so every span is a
+    concrete value the recorder can capture."""
+    cim = cfg.cim
+    if not cim.enabled:
+        raise ValueError("activation calibration needs cfg.cim.enabled")
+    cim = dataclasses.replace(
+        cim, backend="einsum", noise_seed=None,
+        act=dataclasses.replace(cim.act, static_scale=None))
+    return cfg.replace(cim=cim, scan_layers=False)
+
+
+def collect_act_spans(params, tokens, cfg, *, mod=None) -> list[float]:
+    """Per-matmul activation spans (max − min(·, 0)), in call order, over
+    one eager forward of `tokens` [B, T] int32."""
+    if mod is None:
+        from repro.models import registry
+        mod = registry.get_module(cfg)
+    cal_cfg = _calibration_cfg(cfg)
+    with quant.record_act_spans() as spans:
+        mod.forward(params, {"tokens": jnp.asarray(tokens, jnp.int32)},
+                    cal_cfg, train=False)
+    if not spans:
+        raise RuntimeError("calibration forward recorded no activation "
+                           "spans — did every matmul bypass the CIM path?")
+    return spans
+
+
+def calibrate_act_scale(params, tokens, cfg, *, percentile: float = 1.0,
+                        mod=None) -> dict:
+    """One static DAC scale from a calibration batch.
+
+    percentile < 1.0 drops the hottest call sites from the max (the VTC
+    gain trade of Fig. 15: a tighter grid at the cost of clipping their
+    tails). Returns {"scale", "spans", "span", "qmax"}; feed "scale" to
+    Server(act_scale=...) / ActQuantConfig.static_scale.
+    """
+    if not 0.0 < percentile <= 1.0:
+        raise ValueError(f"percentile must be in (0, 1], got {percentile}")
+    spans = collect_act_spans(params, tokens, cfg, mod=mod)
+    ordered = sorted(spans)
+    idx = max(0, math.ceil(percentile * len(ordered)) - 1)
+    span = ordered[idx]
+    qmax = cfg.cim.act.qmax
+    return {"scale": span / qmax, "span": span, "spans": spans,
+            "qmax": qmax}

@@ -89,6 +89,10 @@ class ModelConfig:
     # numerics / technique
     dtype: str = "bfloat16"
     cim: CIMConfig = dataclasses.field(default_factory=CIMConfig)
+    # paged-serving attention backend (kernels.paged_attention registry):
+    # "auto" resolves to the Pallas flash kernel (REPRO_FORCE_JNP=1 pins
+    # the exact jnp reference); "exact"/"kernel" force a backend.
+    attn_backend: str = "auto"
     remat: bool = True
     remat_policy: str = "dots"     # dots | nothing (save less, recompute more)
     # causal chunked attention: unroll the q-chunk loop triangularly (skip

@@ -8,6 +8,7 @@ surgery (GSTE) needed.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from functools import partial
 
@@ -47,6 +48,14 @@ class ActQuantConfig:
     # the full analog range, so amplifying by `gain` reduces quantization
     # error at the cost of clipping the tail.
     clip_percentile: float = 1.0
+    # Static calibrated scale (analysis.calibrate) — the paper's FIXED
+    # input-DAC grid (the P-8T charge-domain DAC reference is a constant,
+    # not a function of the batch). When set, act_scale returns this value
+    # and the zero point is pinned at 0 (unsigned DAC codes; negative tails
+    # clip), making each lane's quantization grid independent of what else
+    # shares the serving batch — the batch-composition decoupling the
+    # runtime.server docstring tracks. None = dynamic per-tensor range.
+    static_scale: float | None = None
 
     @property
     def qmax(self) -> int:
@@ -73,16 +82,46 @@ class WeightQuantConfig:
         return 1 << (self.bits - 1)
 
 
+# Calibration hook: while a `record_act_spans()` context is open (eager
+# forwards only — traced spans are skipped), act_scale appends every
+# activation span it computes, in call order. analysis.calibrate turns the
+# recording into a static scale for ActQuantConfig.static_scale.
+_SPAN_RECORDER: list[list] = []
+
+
+@contextlib.contextmanager
+def record_act_spans():
+    """Collect per-matmul activation spans (max − min(·, 0)) during eager
+    forwards; yields the list being filled."""
+    spans: list[float] = []
+    _SPAN_RECORDER.append(spans)
+    try:
+        yield spans
+    finally:
+        # detach by identity: nested recorders hold ==-equal lists (every
+        # open recorder receives every span), so list.remove would pop the
+        # wrong one
+        _SPAN_RECORDER[:] = [r for r in _SPAN_RECORDER if r is not spans]
+
+
 def act_scale(x: jax.Array, cfg: ActQuantConfig) -> jax.Array:
-    """Dynamic per-tensor affine activation scale: (max − min) / qmax.
+    """Activation scale: the static calibrated grid when
+    cfg.static_scale is set, else the dynamic per-tensor affine range
+    (max − min) / qmax.
 
     For non-negative (post-ReLU) activations — the paper's case — min = 0 and
-    this reduces to max/qmax with zero point 0. Production QAT would use
-    calibrated static scales; dynamic range keeps examples self-contained.
-    stop_gradient: scales are not trained.
+    dynamic reduces to max/qmax with zero point 0. The dynamic range couples
+    every lane's grid to the whole batched tensor (batch-composition
+    dependence under batched serving); calibrated static scales are the
+    production fix. stop_gradient: scales are not trained.
     """
+    if cfg.static_scale is not None:
+        return jnp.asarray(cfg.static_scale, jnp.float32)
     xs = jax.lax.stop_gradient(x)
     span = jnp.maximum(jnp.max(xs) - jnp.minimum(jnp.min(xs), 0.0), 1e-8)
+    if _SPAN_RECORDER and not isinstance(span, jax.core.Tracer):
+        for rec in _SPAN_RECORDER:
+            rec.append(float(span))
     return span / cfg.qmax
 
 
@@ -102,8 +141,15 @@ def quantize_act(x: jax.Array, scale: jax.Array, cfg: ActQuantConfig):
     Affine/asymmetric: q = clip(round(x/s) + z, 0, 15). The zero point folds
     into the digital correction path exactly like Eq. 7's weight offset — see
     `schemes.signed_correction`. For non-negative x (post-ReLU, the paper's
-    case) z = 0 and this reduces to the paper's unsigned DAC codes.
+    case) z = 0 and this reduces to the paper's unsigned DAC codes. Under a
+    static calibrated scale the zero point is pinned at 0 too (the DAC grid
+    must not depend on the batch; negative tails clip, as on the hardware's
+    unsigned C-DAC inputs).
     """
+    if cfg.static_scale is not None:
+        zp = jnp.zeros((), jnp.float32)
+        q = clip_ste(round_ste(x / scale), 0.0, float(cfg.qmax))
+        return q, zp
     zp = jnp.round(jnp.clip(-jnp.min(jax.lax.stop_gradient(x)) / scale, 0, cfg.qmax))
     q = clip_ste(round_ste(x / scale) + zp, 0.0, float(cfg.qmax))
     return q, zp

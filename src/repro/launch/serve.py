@@ -7,6 +7,11 @@
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --paged --prefill-chunk 8 --block-size 16 [--cim bp-prequant]
 
+  # Pallas paged-attention kernel (block gather + online softmax in VMEM;
+  # interpret mode off-TPU) + static calibrated input-DAC scales
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --paged --attn kernel [--cim bp --act-scale static]
+
   REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host [--paged]
       # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
@@ -60,6 +65,20 @@ def main():
     ap.add_argument("--token-budget", type=int, default=None,
                     help="max new tokens per step across all lanes "
                          "(default: slots + prefill chunk)")
+    ap.add_argument("--attn", choices=("auto", "exact", "kernel"),
+                    default="auto",
+                    help="paged attention backend (kernels.paged_attention "
+                         "registry): exact = window gather + one-pass "
+                         "softmax (the [B,C,KH,G,W]-score reference), "
+                         "kernel = Pallas flash decode/prefill over the "
+                         "block tables (interpret mode off-TPU), auto = "
+                         "kernel unless REPRO_FORCE_JNP=1 pins exact")
+    ap.add_argument("--act-scale", choices=("dynamic", "static"),
+                    default="dynamic",
+                    help="static = calibrate one fixed input-DAC grid "
+                         "(analysis.calibrate amax sweep over a synthetic "
+                         "batch) so each lane's CIM quantization is "
+                         "independent of batch composition; needs --cim")
     ap.add_argument("--cim", choices=("off", "bp", "bp-noisy", "bp-prequant"),
                     default="off",
                     help="bp-noisy = NOISY converter chain with "
@@ -96,11 +115,24 @@ def main():
         cfg = cfg.replace(cim=CIMConfig(enabled=True))
     params = registry.init_params(jax.random.PRNGKey(0), cfg,
                                   max_seq=args.max_len)
+    act_scale = None
+    if args.act_scale == "static":
+        if args.cim == "off":
+            ap.error("--act-scale static needs a --cim mode")
+        from repro.analysis.calibrate import calibrate_act_scale
+        cal_rng = np.random.RandomState(7)
+        cal_tokens = cal_rng.randint(0, cfg.vocab, size=(2, 16))
+        cal = calibrate_act_scale(params, cal_tokens, cfg)
+        act_scale = cal["scale"]
+        print(f"calibrated static act_scale={act_scale:.6f} "
+              f"(max span {cal['span']:.4f} over {len(cal['spans'])} "
+              f"matmul sites)")
     server = Server(params, cfg, n_slots=args.slots, max_len=args.max_len,
                     prequant=args.cim == "bp-prequant", paged=args.paged,
                     block_size=args.block_size, num_blocks=args.num_blocks,
                     prefill_chunk=args.prefill_chunk,
-                    token_budget=args.token_budget)
+                    token_budget=args.token_budget, attn=args.attn,
+                    act_scale=act_scale)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -125,6 +157,7 @@ def main():
     ttft = [r.ttft_s for r in reqs]
     lat = [r.latency_s for r in reqs]
     print(f"engine={'paged' if args.paged else 'slots'} "
+          f"attn={args.attn if args.paged else '-'} "
           f"decode={m['decode_tok_s']:.1f} tok/s "
           f"prefill={m['prefill_tok_s']:.1f} tok/s "
           f"kv_bytes total={kv['total']} in_use={kv['in_use']}")

@@ -362,9 +362,11 @@ def paged_prefill_attention(q: jax.Array, k_win: jax.Array, v_win: jax.Array,
     chunked_attention: the result is then independent of how the prompt was
     chunked — the invariance the chunked-prefill equivalence tests pin —
     and decode (C=1) keeps using decode_attention so its bits match the
-    dense-cache path. W is one request's max context, so the [B,C,KH,G,W]
-    score tensor is chunk-bounded; a Pallas paged-attention kernel is the
-    TPU-scale follow-up (see ROADMAP serving section).
+    dense-cache path. W is one request's max context, so this path
+    materializes a [B,C,KH,G,W] score tensor — it is the "exact" entry of
+    the attention-backend registry (kernels.paged_attention); the "kernel"
+    backend is the Pallas flash path whose live scores are one [C·G, bs]
+    tile (the TPU-scale serving configuration).
     """
     b, cq, h, dh = q.shape
     w = k_win.shape[1]
@@ -393,9 +395,13 @@ def paged_attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     cache {"k": [NB, bs, KH, dh], "v": ...} is ONE layer's physical pool.
     Projects and RoPEs this step's tokens at their true per-slot positions,
     scatters them into the pool at flat_idx (masked lanes → trash block),
-    gathers each slot's window through its block table, and attends with
-    per-slot lengths. Returns (y, updated layer pool).
+    and attends with per-slot lengths through the attention-backend
+    registry (kernels.paged_attention, selected by cfg.attn_backend):
+    "exact" gathers the window and runs the one-pass softmax, "kernel" is
+    the Pallas flash path that consumes the pool + tables directly.
+    Returns (y, updated layer pool).
     """
+    from repro.kernels.paged_attention import paged_attention
     b, c, _ = x.shape
     dh = cfg.head_dim
     q = dense(p, x, cfg, w="wq", b="bq").reshape(b, c, cfg.n_heads, dh)
@@ -407,15 +413,8 @@ def paged_attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
         k1 = rope(k1, positions, cfg.rope_theta, _rope_dims(cfg))
     k_pool = paged_write(cache["k"], k1, flat_idx)
     v_pool = paged_write(cache["v"], v1, flat_idx)
-    k_win = paged_gather(k_pool, tables)
-    v_win = paged_gather(v_pool, tables)
-    if c == 1:
-        # same window shape + mask math as the dense slot cache → decode
-        # stays bit-identical to the unpaged decode_attention path
-        o = decode_attention(q, k_win, v_win,
-                             kv_len[:, None, None, None])
-    else:
-        o = paged_prefill_attention(q, k_win, v_win, positions, kv_len)
+    o = paged_attention(q, k_pool, v_pool, tables, positions=positions,
+                        kv_len=kv_len, backend=cfg.attn_backend)
     o = o.reshape(b, c, cfg.n_heads * dh)
     o = constrain(o, "batch", None, "tp")
     y = dense(p, o, cfg, w="wo", b="bo")

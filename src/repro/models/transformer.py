@@ -486,10 +486,13 @@ def paged_step(params: dict, tokens: jax.Array, cache: dict,
     C-wide call. lens [B] = tokens already in each slot's cache; valid [B]
     = new tokens this step (0 = idle lane). Writes each slot's new K/V at
     its true positions through its block table (masked lanes → the trash
-    block), attends per-slot, and returns (logits [B, V] taken at each
-    slot's LAST valid position, updated pool). The host scheduler decides
-    whose logits mean anything this step (decode slots every step;
-    prefilling slots only on their final chunk).
+    block), attends per-slot through the attention backend selected by
+    cfg.attn_backend (kernels.paged_attention: "exact" window softmax vs
+    the Pallas flash "kernel" whose live scores are one [C·G, bs] tile),
+    and returns (logits [B, V] taken at each slot's LAST valid position,
+    updated pool). The host scheduler decides whose logits mean anything
+    this step (decode slots every step; prefilling slots only on their
+    final chunk).
     """
     b, c = tokens.shape
     block_size = jax.tree_util.tree_leaves(cache)[0].shape[2]

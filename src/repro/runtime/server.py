@@ -38,6 +38,15 @@ decode. Unservable requests (prompt ≥ max_len, or a
 worst-case block reservation larger than the whole pool) are rejected at
 submit() so they can never poison the queue.
 
+Attention backends (paged engine): `Server(attn=...)` selects the paged
+step's attention path from the kernels.paged_attention registry — "exact"
+(the PR-4 gather + one-pass softmax, the bit-identity anchor), "kernel"
+(the Pallas flash kernel: block gather inside the kernel, online softmax in
+VMEM, no [B, C, KH, G, W] score tensor), or "auto" (kernel, unless
+REPRO_FORCE_JNP=1 pins exact). The kernel path agrees with exact within
+float tolerance, so greedy tokens match except on near-tie logits; the
+bit-identity soak contracts below are pinned against attn="exact".
+
 The bit-identity contracts above hold for FLOAT models (and for any fixed
 schedule). Under `cim.enabled` the engine's dynamic per-tensor act_scale
 (core.quant.act_scale — a global max over the batched activation tensor)
@@ -45,7 +54,10 @@ couples every lane's quantization grid to the whole batch's content, so
 CIM-mode outputs depend on batch COMPOSITION — a pre-existing property of
 the seed slot engine that the paged engine inherits identically (both
 engines agree under the same schedule; different token budgets can differ
-on near-tie logits). Static calibrated scales are the production fix.
+on near-tie logits). The production fix is `Server(act_scale=...)`: a
+static calibrated scale (analysis.calibrate) pins one fixed input-DAC grid
+(zero point 0) for every lane, making a request's tokens invariant to
+batch composition — pinned by tests/test_calibrate.py.
 """
 from __future__ import annotations
 
@@ -111,7 +123,8 @@ class Server:
                  max_len: int, prequant: bool = False, packed: bool = True,
                  paged: bool = False, block_size: int = 16,
                  num_blocks: int | None = None, prefill_chunk: int = 16,
-                 token_budget: int | None = None):
+                 token_budget: int | None = None, attn: str = "auto",
+                 act_scale: float | None = None):
         """prequant=True re-encodes CIM-routed weights as offline-quantized
         stored codes before serving (models.quantize.quantize_params) —
         nibble-packed uint8 when `packed` (4 bits/weight at rest, the
@@ -122,7 +135,19 @@ class Server:
         n_slots × max_len / block_size — size it smaller to realize the
         paged memory win), `prefill_chunk` tokens per prompt chunk and
         `token_budget` max new tokens per step (default: decode lanes +
-        one full prefill chunk)."""
+        one full prefill chunk). `attn` picks the paged attention backend
+        ("auto" | "exact" | "kernel" — see module docstring).
+        `act_scale` pins a static calibrated activation scale (the value
+        from analysis.calibrate.calibrate_act_scale) into the CIM
+        quantizer — requires cfg.cim.enabled."""
+        from repro.kernels.paged_attention import choose_attn_backend
+        choose_attn_backend(attn)   # validate the name up front
+        cfg = cfg.replace(attn_backend=attn)
+        if act_scale is not None:
+            assert cfg.cim.enabled, "static act_scale needs cim.enabled"
+            cfg = cfg.replace(cim=dataclasses.replace(
+                cfg.cim, act=dataclasses.replace(
+                    cfg.cim.act, static_scale=float(act_scale))))
         if prequant:
             assert cfg.cim.enabled, "prequant serving needs cim.enabled"
             from repro.models.quantize import quantize_params

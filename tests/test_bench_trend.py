@@ -25,6 +25,17 @@ def _doc(us_decode=400.0, ratio=1.02):
             {"name": "serve_kv_bytes_occ25_s4", "us": 1000.0,
              "derived": "kv_bytes slot=262144 paged=16384 "
                         "(16.00x less HBM)"},
+            # schema-v3 paged-attention sweep rows: the extractor must keep
+            # the LARGEST window's score-byte probe and must not let the
+            # attnkernel serving row clobber the exact-path serve tok/s
+            {"name": "paged_attn_decode_w64", "us": 800.0,
+             "derived": "exact_us=300.0|score_bytes exact=2048 kernel=64 "
+                        "(32x less)"},
+            {"name": "paged_attn_decode_w256", "us": 900.0,
+             "derived": "exact_us=600.0|score_bytes exact=8192 kernel=64 "
+                        "(128x less)"},
+            {"name": "serve_decode_paged_attnkernel_s4_r4", "us": 95000.0,
+             "derived": "decode_tok_s=9.5|exact_tok_s=11.0|ratio=0.864"},
         ],
     }
 
@@ -43,6 +54,13 @@ def test_extract_metrics():
     assert m["kv_bytes_slot"] == 262144
     assert m["kv_bytes_paged"] == 16384
     assert m["kv_win"] == pytest.approx(16.0)
+    # schema-v3 paged-attention sweep: largest window wins; the attnkernel
+    # serving row fills its own metric without clobbering serve_decode_tok_s
+    assert m["attn_kernel_tok_s"] == pytest.approx(9.5)
+    assert m["score_window"] == 256
+    assert m["score_bytes_exact"] == 8192
+    assert m["score_bytes_kernel"] == 64
+    assert m["score_win"] == pytest.approx(128.0)
 
 
 def test_extract_metrics_tolerates_missing_rows():
@@ -76,9 +94,10 @@ def test_history_append_and_render(tmp_path):
     assert "run-a" in md and "run-b" in md
     assert "20000" in md    # 8 tok / 400 µs
     assert "2.00×" in md and "36864" in md
-    # table stays well-formed: every data row has the 9 columns
+    assert "9.5" in md and "128×" in md    # v3 attn-kernel + score probe
+    # table stays well-formed: every data row has the 12 columns
     rows = [ln for ln in md.splitlines() if ln.startswith("| run-")]
-    assert all(ln.count("|") == 10 for ln in rows)
+    assert all(ln.count("|") == 13 for ln in rows)
 
 
 def test_one_shot_mode(tmp_path):

@@ -1,0 +1,121 @@
+"""Static calibrated activation scales: the recorder hook, the calibrate
+helper, and the serving-level batch-composition invariance it exists for
+(closing the dynamic-act_scale coupling documented in runtime/server.py
+since PR 4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.calibrate import calibrate_act_scale, collect_act_spans
+from repro.configs.registry import SMOKES
+from repro.core.cim_matmul import CIMConfig
+from repro.core.quant import ActQuantConfig, act_scale, quantize_act, \
+    record_act_spans
+from repro.models import registry
+from repro.runtime.server import Request, Server
+
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def cim_setup():
+    cfg = SMOKES["internlm2-1.8b"].replace(
+        dtype="float32", cim=CIMConfig(enabled=True))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg,
+                                  max_seq=MAX_LEN)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# quantizer-level static behaviour
+# ---------------------------------------------------------------------------
+def test_record_act_spans_captures_eager_spans():
+    cfg = ActQuantConfig()
+    x = jnp.asarray([[-1.0, 0.0, 2.0], [0.5, 3.0, 1.0]])
+    with record_act_spans() as spans:
+        s = act_scale(x, cfg)
+    # span = max - min(·, 0) = 3 - (-1) = 4; scale = span / qmax
+    assert spans == [pytest.approx(4.0)]
+    assert float(s) == pytest.approx(4.0 / cfg.qmax)
+    # recorder closed: no further captures
+    act_scale(x, cfg)
+    assert len(spans) == 1
+
+
+def test_static_scale_overrides_dynamic_and_pins_zero_point():
+    cfg = ActQuantConfig(static_scale=0.25)
+    x = jnp.asarray([-0.4, 0.0, 1.0, 3.0])
+    assert float(act_scale(x, cfg)) == pytest.approx(0.25)
+    q, zp = quantize_act(x, act_scale(x, cfg), cfg)
+    assert float(zp) == 0.0
+    # grid is lane-local: q = clip(round(x / 0.25), 0, 15); negatives clip
+    assert np.allclose(np.asarray(q), [0.0, 0.0, 4.0, 12.0])
+    # and the static grid ignores the tensor's content entirely
+    q2, _ = quantize_act(x.at[0].set(-50.0), act_scale(x, cfg), cfg)
+    assert np.allclose(np.asarray(q2)[1:], np.asarray(q)[1:])
+
+
+# ---------------------------------------------------------------------------
+# calibrate helper
+# ---------------------------------------------------------------------------
+def test_collect_spans_one_per_cim_matmul(cim_setup):
+    cfg, params = cim_setup
+    tokens = np.arange(8, dtype=np.int32).reshape(1, 8) % cfg.vocab
+    spans = collect_act_spans(params, tokens, cfg)
+    # per-layer profile: qkv+o (4) + swiglu gate/up/down (3) per layer
+    # (forward() stops at the final norm — unembed runs at serving time
+    # with the same static grid)
+    assert len(spans) == cfg.n_layers * 7
+    assert all(s > 0 for s in spans)
+
+
+def test_calibrate_act_scale_values_and_percentile(cim_setup):
+    cfg, params = cim_setup
+    tokens = np.arange(8, dtype=np.int32).reshape(1, 8) % cfg.vocab
+    cal = calibrate_act_scale(params, tokens, cfg)
+    assert cal["scale"] == pytest.approx(max(cal["spans"]) / cal["qmax"])
+    tight = calibrate_act_scale(params, tokens, cfg, percentile=0.5)
+    assert tight["scale"] <= cal["scale"]
+    with pytest.raises(ValueError):
+        calibrate_act_scale(params, tokens, cfg, percentile=0.0)
+    cfg_off = cfg.replace(cim=CIMConfig(enabled=False))
+    with pytest.raises(ValueError):
+        calibrate_act_scale(params, tokens, cfg_off)
+
+
+# ---------------------------------------------------------------------------
+# the point of it all: batch-composition invariance under static scales
+# ---------------------------------------------------------------------------
+def test_static_scale_decouples_lane_from_batch(cim_setup):
+    """Under a static calibrated scale a request's greedy tokens are
+    IDENTICAL whether it serves alone or batched with other requests —
+    the dynamic per-tensor act_scale cannot provide this (its grid is a
+    global max over the batched tensor)."""
+    cfg, params = cim_setup
+    tokens = np.arange(16, dtype=np.int32).reshape(2, 8) % cfg.vocab
+    scale = calibrate_act_scale(params, tokens, cfg)["scale"]
+    probe = [5, 9, 2, 7, 4]
+    companions = [[11, 3, 8], [1, 2, 3, 4, 5, 6]]
+
+    def probe_tokens(with_companions: bool):
+        server = Server(params, cfg, n_slots=3, max_len=MAX_LEN,
+                        paged=True, block_size=8, prefill_chunk=4,
+                        attn="exact", act_scale=scale)
+        req = Request(prompt=list(probe), max_new_tokens=4)
+        server.submit(req)
+        if with_companions:
+            for p in companions:
+                server.submit(Request(prompt=list(p), max_new_tokens=4))
+        server.run_until_drained()
+        return req.output
+
+    assert probe_tokens(False) == probe_tokens(True)
+
+
+def test_server_act_scale_requires_cim(cim_setup):
+    cfg, params = cim_setup
+    float_cfg = cfg.replace(cim=CIMConfig(enabled=False))
+    with pytest.raises(AssertionError):
+        Server(params, float_cfg, n_slots=1, max_len=MAX_LEN,
+               act_scale=0.1)

@@ -1,0 +1,230 @@
+"""Paged-attention kernel subsystem: registry contracts, Pallas-kernel vs
+exact-reference parity (decode + chunked prefill, GQA shapes, windows
+spanning ≥ 4 blocks), trash-block NaN/garbage hardening, and the
+1-device-mesh shard_map bit-identity.
+
+The Pallas tests run the kernel in interpret mode (CPU CI); under
+REPRO_FORCE_JNP=1 the explicit-kernel tests skip — that leg models an
+environment without interpret-mode Pallas, where auto-selection must pin
+the exact backend (which IS tested in that leg).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import paged_attention as pa
+from repro.parallel import sharding
+
+_FORCED = os.environ.get("REPRO_FORCE_JNP", "").strip().lower() in (
+    "1", "true", "yes")
+needs_pallas = pytest.mark.skipif(
+    _FORCED, reason="direct Pallas kernel tests; REPRO_FORCE_JNP leg is "
+                    "jnp-only")
+
+
+def _make_case(seed, *, b=3, kh=2, g=2, dh=32, bs=8, mb=5, c=1,
+               full_depth=False):
+    """Random pool + block tables + per-slot depths for a C-wide step.
+
+    Returns everything both backends consume. Depths are mixed across
+    slots (or pinned to the deepest window with full_depth); allocated
+    blocks are distinct ids >= 1, unallocated table entries point at the
+    trash block 0 — exactly the runtime.paging layout.
+    """
+    rng = np.random.RandomState(seed)
+    key = jax.random.PRNGKey(seed)
+    w = mb * bs
+    nb = b * mb + 1
+    q = jax.random.normal(key, (b, c, kh * g, dh), jnp.float32)
+    kp = jax.random.normal(jax.random.fold_in(key, 1), (nb, bs, kh, dh),
+                           jnp.float32)
+    vp = jax.random.normal(jax.random.fold_in(key, 2), (nb, bs, kh, dh),
+                           jnp.float32)
+    if full_depth:
+        lens = np.full(b, w - c, np.int64)
+    else:
+        lens = np.array([rng.randint(0, w - c + 1) for _ in range(b)])
+    kvl = lens + c
+    # distinct physical blocks per slot, trash block elsewhere
+    free = list(range(1, nb))
+    rng.shuffle(free)
+    tables = np.zeros((b, mb), np.int32)
+    for s in range(b):
+        need = -(-int(kvl[s]) // bs)
+        for j in range(need):
+            tables[s, j] = free.pop()
+    positions = jnp.asarray(lens[:, None] + np.arange(c), jnp.int32)
+    return (q, kp, vp, jnp.asarray(tables), positions,
+            jnp.asarray(kvl, jnp.int32))
+
+
+def _run(backend, case):
+    q, kp, vp, tables, positions, kvl = case
+    return pa.paged_attention(q, kp, vp, tables, positions=positions,
+                              kv_len=kvl, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_contents():
+    assert {"exact", "kernel"} <= set(pa.available_attn_backends())
+    assert pa.get_attn_backend("exact").name == "exact"
+    assert pa.get_attn_backend("kernel").pallas
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        pa.get_attn_backend("nope")
+    with pytest.raises(ValueError):
+        pa.choose_attn_backend("nope")
+
+
+def test_auto_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_JNP", raising=False)
+    assert pa.choose_attn_backend("auto") == "kernel"
+    assert pa.choose_attn_backend("exact") == "exact"
+    monkeypatch.setenv("REPRO_FORCE_JNP", "1")
+    assert pa.choose_attn_backend("auto") == "exact"
+    # explicit names bypass the env pin, like the CIM engine's backends
+    assert pa.choose_attn_backend("kernel") == "kernel"
+
+
+# ---------------------------------------------------------------------------
+# kernel vs exact parity
+# ---------------------------------------------------------------------------
+@needs_pallas
+@pytest.mark.parametrize("kh,g", [(1, 4), (2, 2), (4, 1)])
+def test_decode_parity_gqa_shapes(kh, g):
+    """C=1 decode at mixed depths over a 5-block window, for MHA/GQA/MQA
+    group shapes."""
+    case = _make_case(11 + kh, kh=kh, g=g, c=1)
+    o_exact = _run("exact", case)
+    o_kernel = _run("kernel", case)
+    assert o_kernel.shape == o_exact.shape
+    assert jnp.allclose(o_kernel, o_exact, atol=2e-5, rtol=2e-5), \
+        float(jnp.max(jnp.abs(o_kernel - o_exact)))
+
+
+@needs_pallas
+@pytest.mark.parametrize("c", [2, 5, 8])
+def test_prefill_chunk_parity(c):
+    """C-wide prefill chunks (causal within the chunk, windows ≥ 4 blocks)
+    agree with the exact one-pass softmax."""
+    case = _make_case(23 + c, b=2, mb=6, c=c)
+    o_exact = _run("exact", case)
+    o_kernel = _run("kernel", case)
+    assert jnp.allclose(o_kernel, o_exact, atol=2e-5, rtol=2e-5), \
+        float(jnp.max(jnp.abs(o_kernel - o_exact)))
+
+
+@needs_pallas
+def test_full_window_decode_parity():
+    """Deepest possible decode: every table entry allocated, the query at
+    the last position of the window."""
+    case = _make_case(5, b=2, mb=4, c=1, full_depth=True)
+    assert jnp.allclose(_run("kernel", case), _run("exact", case),
+                        atol=2e-5, rtol=2e-5)
+
+
+@needs_pallas
+def test_idle_lane_outputs_finite():
+    """kv_len = 0 lanes (idle slots in a mixed batch) must emit finite
+    values from both backends — their outputs are discarded, but NaN would
+    poison the whole jit output buffer check."""
+    q, kp, vp, tables, positions, kvl = _make_case(7, b=2, c=1)
+    kvl = kvl.at[0].set(0)
+    positions = positions.at[0].set(0)
+    tables = tables.at[0].set(0)
+    for backend in ("exact", "kernel"):
+        o = pa.paged_attention(q, kp, vp, tables, positions=positions,
+                               kv_len=kvl, backend=backend)
+        assert bool(jnp.all(jnp.isfinite(o))), backend
+
+
+# ---------------------------------------------------------------------------
+# trash-block hardening: NaN/garbage in never-attended storage
+# ---------------------------------------------------------------------------
+@needs_pallas
+@pytest.mark.parametrize("poison", [float("nan"), 1e6, -1e6])
+def test_trash_block_poison_invariance(poison):
+    """Physical block 0 (masked-lane writes, unallocated table entries) is
+    never read at non-zero softmax weight — poisoning it with NaN or huge
+    garbage must not change either backend's output by a single bit.
+    NaN is the adversarial case: a masked weight of exactly 0 still turns
+    into NaN through 0·NaN unless the V rows are sanitized."""
+    case = _make_case(31, b=3, mb=5, c=1)
+    q, kp, vp, tables, positions, kvl = case
+    kp_p = kp.at[0].set(poison)
+    vp_p = vp.at[0].set(poison)
+    for backend in ("exact", "kernel"):
+        clean = pa.paged_attention(q, kp, vp, tables, positions=positions,
+                                   kv_len=kvl, backend=backend)
+        dirty = pa.paged_attention(q, kp_p, vp_p, tables,
+                                   positions=positions, kv_len=kvl,
+                                   backend=backend)
+        assert jnp.array_equal(clean, dirty), backend
+
+
+@needs_pallas
+def test_stale_block_tail_poison_invariance():
+    """Positions past kv_len INSIDE an allocated block (the stale tail a
+    LIFO-reused block carries) are masked too: poison every pool position
+    at or past each slot's kv_len and require bit-identical outputs."""
+    case = _make_case(37, b=2, mb=4, c=3)
+    q, kp, vp, tables, positions, kvl = case
+    bs = kp.shape[1]
+    kp_p, vp_p = np.asarray(kp).copy(), np.asarray(vp).copy()
+    for s in range(tables.shape[0]):
+        for j, blk in enumerate(np.asarray(tables[s])):
+            if blk == 0:
+                continue
+            off = int(kvl[s]) - j * bs
+            if off < bs:
+                kp_p[blk, max(off, 0):] = np.nan
+                vp_p[blk, max(off, 0):] = np.nan
+    for backend in ("exact", "kernel"):
+        clean = pa.paged_attention(q, kp, vp, tables, positions=positions,
+                                   kv_len=kvl, backend=backend)
+        dirty = pa.paged_attention(q, jnp.asarray(kp_p), jnp.asarray(vp_p),
+                                   tables, positions=positions, kv_len=kvl,
+                                   backend=backend)
+        assert jnp.array_equal(clean, dirty), backend
+
+
+# ---------------------------------------------------------------------------
+# mesh dispatch
+# ---------------------------------------------------------------------------
+@needs_pallas
+def test_one_device_mesh_bit_identity():
+    """The shard_map wrapping on a 1-device mesh must be bit-identical to
+    the plain kernel call (the same contract the CIM engine pins)."""
+    from repro.launch.mesh import make_host_mesh
+    case = _make_case(41, b=2, c=1)
+    ref = _run("kernel", case)
+    sharding.set_mesh(make_host_mesh(1, 1))
+    try:
+        meshed = _run("kernel", case)
+    finally:
+        sharding.set_mesh(None)
+    assert jnp.array_equal(ref, meshed)
+
+
+def test_exact_backend_matches_pre_registry_math():
+    """The exact backend IS the PR-4 path: gather + decode_attention /
+    paged_prefill_attention, with the V sanitization a bit-exact no-op on
+    clean pools."""
+    from repro.models import common
+    for c in (1, 4):
+        case = _make_case(47 + c, b=2, c=c)
+        q, kp, vp, tables, positions, kvl = case
+        k_win = common.paged_gather(kp, tables)
+        v_win = common.paged_gather(vp, tables)
+        if c == 1:
+            ref = common.decode_attention(q, k_win, v_win,
+                                          kvl[:, None, None, None])
+        else:
+            ref = common.paged_prefill_attention(q, k_win, v_win,
+                                                 positions, kvl)
+        got = _run("exact", case)
+        assert jnp.array_equal(ref, got)

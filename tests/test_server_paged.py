@@ -16,6 +16,7 @@ Equivalence contracts (greedy token IDs, exact list equality):
     time reference everywhere.
 """
 import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +28,12 @@ from repro.models import registry
 from repro.runtime.server import Request, Server
 
 MAX_LEN = 64
+
+_FORCED = os.environ.get("REPRO_FORCE_JNP", "").strip().lower() in (
+    "1", "true", "yes")
+needs_pallas = pytest.mark.skipif(
+    _FORCED, reason="explicit Pallas attention backend; REPRO_FORCE_JNP "
+                    "leg is jnp-only")
 
 
 @pytest.fixture(scope="module")
@@ -57,6 +64,10 @@ def _mk_server(cfg, params, **kw):
     kw.setdefault("max_len", MAX_LEN)
     kw.setdefault("block_size", 8)
     kw.setdefault("prefill_chunk", 4)
+    # the BIT-identity soaks in this file pin the exact attention backend
+    # (the dense-cache-equivalent math); the Pallas kernel backend agrees
+    # within float tolerance and has its own soak below
+    kw.setdefault("attn", "exact")
     return Server(params, cfg, paged=True, **kw)
 
 
@@ -346,6 +357,86 @@ def test_unservable_requests_rejected_at_submit(setup):
     assert server.queue == []         # nothing poisoned the queue
     server.run_until_drained()        # in-flight request still completes
     assert good.done and len(good.output) == 3
+
+
+# ---------------------------------------------------------------------------
+# Pallas attention-kernel backend: soak parity + trash-block hardening
+# ---------------------------------------------------------------------------
+@needs_pallas
+def test_soak_mixed_depth_kernel_backend(setup):
+    """The Pallas flash backend through the full serving loop: randomized
+    mixed-depth admission, greedy tokens equal to one-request-at-a-time
+    decode (the kernel agrees with exact within float tolerance — far
+    below the logit gaps of this seeded schedule)."""
+    cfg, params, one_at_a_time = setup
+    rng = np.random.RandomState(9)
+    server = _mk_server(cfg, params, attn="kernel")
+    schedule = {0: 2, 3: 1}
+    reqs, step = [], 0
+    while reqs == [] or any(not r.done for r in reqs) or server.queue:
+        for _ in range(schedule.get(step, 0)):
+            plen = int(rng.randint(3, 9))
+            r = Request(prompt=rng.randint(0, cfg.vocab, size=plen).tolist(),
+                        max_new_tokens=int(rng.randint(2, 5)))
+            server.submit(r)
+            reqs.append(r)
+        server.step()
+        step += 1
+        assert step < 200, "schedule did not drain"
+    for r in reqs:
+        assert r.output == one_at_a_time(r.prompt, r.max_new_tokens), r.rid
+    assert server.alloc.stats.in_use == 0
+
+
+@needs_pallas
+def test_prefill_chunk_invariance_kernel_backend(setup):
+    """Chunk-size invariance holds on the kernel backend too: the online
+    softmax accumulates over KV blocks, not prompt chunks, so the chunk
+    schedule cannot reassociate the reduction."""
+    cfg, params, one_at_a_time = setup
+    prompt = [7, 3, 11, 19, 2, 5, 13]
+    ref = one_at_a_time(prompt, 4)
+    for chunk in (2, 5, 16):
+        server = _mk_server(cfg, params, n_slots=1, prefill_chunk=chunk,
+                            attn="kernel")
+        req = Request(prompt=list(prompt), max_new_tokens=4)
+        server.submit(req)
+        server.run_until_drained()
+        assert req.output == ref, f"chunk={chunk}"
+
+
+def _poison_trash_block(server, value):
+    """Fill physical block 0 of every layer pool with `value`."""
+    server.cache = jax.tree.map(lambda a: a.at[:, 0].set(value),
+                                server.cache)
+
+
+@pytest.mark.parametrize("attn", ["exact",
+                                  pytest.param("kernel",
+                                               marks=needs_pallas)])
+@pytest.mark.parametrize("poison", [float("nan"), 1e6])
+def test_trash_block_poison_server(setup, attn, poison):
+    """Poison physical block 0 (the masked-lane write sink / unallocated-
+    table target) with NaN / huge garbage before serving: a mixed-depth
+    schedule must produce exactly the tokens of a clean run on BOTH
+    attention backends — any future softmax-weight leak onto the trash
+    block shows up here immediately."""
+    cfg, params, _ = setup
+    rng = np.random.RandomState(17)
+    prompts = [rng.randint(0, cfg.vocab, size=int(rng.randint(3, 9))).tolist()
+               for _ in range(3)]
+
+    def drain(poison_value):
+        server = _mk_server(cfg, params, attn=attn)
+        if poison_value is not None:
+            _poison_trash_block(server, poison_value)
+        reqs = [Request(prompt=list(p), max_new_tokens=3) for p in prompts]
+        for r in reqs:
+            server.submit(r)
+        server.run_until_drained()
+        return [r.output for r in reqs]
+
+    assert drain(poison) == drain(None)
 
 
 def test_unsupported_arch_raises():
