@@ -12,9 +12,17 @@ paged engine on the kernel attention backend) over concurrent requests
 with mixed prompt lengths — decode tok/s plus the resident KV-cache bytes
 at 25 % slot occupancy (the paged-pool memory win).
 
+Schema v4 adds the AUTOTUNE sweep: `--autotune` times every candidate
+pipeline config from kernels.autotune (paged-attention kblocks/row_tile,
+CIM-MVM (bm, bn) tiles) through this same harness, reports paired
+`<name>_default` / `<name>_tuned` rows (the tuned row's derived field
+carries `default_us` and `speedup`), and persists the winners as a
+tune-cache JSON (`--tune-cache`, default tune_cache.json) that the
+dispatchers consult through $REPRO_TUNE_CACHE.
+
 CLI (the CI bench-smoke job):
     PYTHONPATH=src python -m benchmarks.kernel_bench --small \\
-        --json-out BENCH_ci.json
+        --autotune --json-out BENCH_ci.json
 writes a machine-readable BENCH_ci.json ({"schema": ..., "rows": [...]})
 so per-PR perf-trajectory data accumulates as workflow artifacts."""
 import argparse
@@ -26,13 +34,14 @@ import jax.numpy as jnp
 
 from repro.core.macro import MacroConfig, SimLevel
 from repro.core.schemes import cim_mvm_codes
+from repro.kernels import autotune
 from repro.kernels.ops import (cim_mvm_pallas, cim_mvm_pallas_noisy,
                                cim_mvm_pallas_packed, pack_codes)
 from repro.kernels.ref import cim_mvm_ref
 
 from .common import row, timeit
 
-BENCH_SCHEMA = "pico-ram/kernel_bench/v3"  # v3: + paged-attention sweep
+BENCH_SCHEMA = "pico-ram/kernel_bench/v4"  # v4: + autotune tuned-vs-default
 
 
 def run(small: bool = False):
@@ -265,6 +274,99 @@ def run_serving_sweep(small: bool = False):
     return out
 
 
+def run_autotune(small: bool = False):
+    """Time every candidate config from kernels.autotune and keep the wins.
+
+    Two shape families, chosen to be the ones the acceptance criteria
+    track:
+
+      * paged attention, decode at W = 4096 (`decode_w4096`) — the window
+        where the default pagination pays 256 sequential fetch steps. The
+        candidate space is (block_size, kblocks, row_tile): kblocks fetches
+        several blocks per step (the TPU double-buffering win), block_size
+        re-paginates the pool into coarser blocks (fewer, larger fetches —
+        the win that also shows in interpret mode, where per-fetch overhead
+        dominates). Run even under --small: the family IS the artifact row.
+      * the CIM MVM tile family of the --small smoke shape (m64_g2_n64) or
+        the full bench shape, over (bm, bn) tile candidates.
+
+    Returns (rows, entries): paired `_default`/`_tuned` bench rows plus the
+    tune-cache entries for autotune.save_cache. The default config is
+    always candidate 0, so `_tuned` can only tie or beat it.
+    """
+    from repro.kernels.paged_attention import paged_flash_attention
+    rows_out, entries = [], {}
+
+    # ---- paged attention: decode, W = 4096 --------------------------------
+    # candidate 0 is the serving default (block_size 16, kblocks 1); the
+    # block_size candidates re-paginate the SAME window into coarser pool
+    # blocks — fewer, larger fetches per sequential step, the layout knob
+    # serve.py --tune-cache feeds back into the paged pool
+    b, kh, g, dh, bs = 1, 1, 4, 32, 16
+    w = 4096
+    key = jax.random.PRNGKey(9)
+    q = jax.random.normal(key, (b, 1, kh * g, dh), jnp.float32)
+    kv = jax.random.normal(jax.random.fold_in(key, 1),
+                           (2, b, w, kh, dh), jnp.float32)
+    cands = autotune.attn_candidates(w // bs, kh * g, block_size=bs)
+    if small:  # smoke: default, deepest pipeline, and the layout candidates
+        cands = [c for c in cands
+                 if c["kblocks"] in (1, 16) or c["block_size"] != bs]
+    timed = []
+    for cand in cands:
+        cbs = cand["block_size"]
+        mb = w // cbs
+        pools = kv.reshape(2, b * mb, cbs, kh, dh)
+        kp = jnp.concatenate([jnp.zeros((1, cbs, kh, dh)), pools[0]])
+        vp = jnp.concatenate([jnp.zeros((1, cbs, kh, dh)), pools[1]])
+        tables = (1 + jnp.arange(b * mb, dtype=jnp.int32)).reshape(b, mb)
+        lens = jnp.full((b,), w - 1, jnp.int32)
+        kvl = lens + 1
+        fn = jax.jit(lambda qq, kk, vv, _t=tables, _l=lens, _kv=kvl,
+                     _kb=cand["kblocks"], _rt=cand["row_tile"]:
+                     paged_flash_attention(qq, kk, vv, _t, _l, _kv,
+                                           kblocks=_kb, row_tile=_rt))
+        timed.append((timeit(fn, q, kp, vp), cand))
+    default_us = timed[0][0]
+    best_us, best = min(timed, key=lambda t: t[0])
+    fam = autotune.attn_family(w, 1)
+    entries[autotune.cache_key("paged_attn", fam, "kernel")] = {
+        **best, "us": best_us, "default_us": default_us}
+    rows_out.append(row(f"paged_attn_{fam}_default", default_us,
+                        f"block_size={bs}|kblocks=1|row_tile=None"))
+    rows_out.append(row(
+        f"paged_attn_{fam}_tuned", best_us,
+        f"default_us={default_us:.1f}|"
+        f"speedup={default_us / max(best_us, 1e-9):.2f}x|"
+        f"block_size={best['block_size']}|"
+        f"kblocks={best['kblocks']}|row_tile={best['row_tile']}"))
+
+    # ---- CIM MVM tiles ----------------------------------------------------
+    cfg = MacroConfig()
+    m, k, n = (64, 288, 64) if small else (256, 1152, 256)
+    x = jax.random.randint(key, (m, k), 0, 16).astype(jnp.float32)
+    wmat = jax.random.randint(jax.random.fold_in(key, 3), (k, n), 0,
+                              16).astype(jnp.float32)
+    timed = []
+    for cand in autotune.mvm_candidates(m, n):
+        fn = (lambda a, bb, _bm=cand["bm"], _bn=cand["bn"]:
+              cim_mvm_pallas(a, bb, cfg, bm=_bm, bn=_bn))
+        timed.append((timeit(fn, x, wmat), cand))
+    default_us = timed[0][0]
+    best_us, best = min(timed, key=lambda t: t[0])
+    fam = autotune.mvm_family(m, -(-k // cfg.n_rows), n)
+    entries[autotune.cache_key("cim_mvm", fam, "pallas")] = {
+        **best, "us": best_us, "default_us": default_us}
+    rows_out.append(row(f"cim_mvm_{fam}_default", default_us,
+                        "bm=128|bn=128"))
+    rows_out.append(row(
+        f"cim_mvm_{fam}_tuned", best_us,
+        f"default_us={default_us:.1f}|"
+        f"speedup={default_us / max(best_us, 1e-9):.2f}x|"
+        f"bm={best['bm']}|bn={best['bn']}"))
+    return rows_out, entries
+
+
 def rows_to_json(rows: list[str]) -> dict:
     """CSV rows ("name,us,derived") → the BENCH_ci.json document."""
     parsed = []
@@ -286,8 +388,22 @@ def main(argv=None) -> None:
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="also write the rows as a JSON document "
                          "(the bench-smoke artifact)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="time the kernels.autotune candidate configs, "
+                         "append tuned-vs-default rows, and persist the "
+                         "winners to --tune-cache")
+    ap.add_argument("--tune-cache", default="tune_cache.json",
+                    metavar="PATH",
+                    help="where --autotune writes the tuning cache "
+                         "(consumed via $REPRO_TUNE_CACHE)")
     args = ap.parse_args(argv)
     rows = run(small=args.small)
+    if args.autotune:
+        tuned_rows, entries = run_autotune(small=args.small)
+        rows += tuned_rows
+        autotune.save_cache(args.tune_cache, entries)
+        print(f"wrote {args.tune_cache} ({len(entries)} tuned entries)",
+              flush=True)
     if args.json_out:
         doc = rows_to_json(rows)
         with open(args.json_out, "w") as f:

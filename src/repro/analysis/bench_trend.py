@@ -34,7 +34,11 @@ Tracked columns (parsed from the bench rows; missing rows render as "—"):
     backend's), and the peak score-tensor bytes of the LARGEST swept
     window — exact materializes [B, C, KH, G, W] (O(W)), the kernel keeps
     one [C·G, block] tile (O(block)); the ×-less factor is the memory
-    probe the acceptance criteria pin.
+    probe the acceptance criteria pin;
+  * (schema v4) the autotune sweep: tuned-vs-default speedup of the
+    W=4096 decode paged-attention family (`paged_attn_decode_w4096_tuned`
+    vs its `_default` twin, from `kernel_bench --autotune`) — the number
+    the bench-smoke job gates at ≥ 1.25×.
 """
 from __future__ import annotations
 
@@ -86,6 +90,15 @@ def extract_metrics(doc: dict) -> dict:
             sd = re.search(r"decode_tok_s=([\d.]+)", derived)
             if sd:
                 out["serve_decode_tok_s"] = float(sd.group(1))
+        m4 = re.match(r"paged_attn_decode_w(\d+)_tuned", name)
+        if m4:
+            sp = re.search(r"speedup=([\d.]+)x", derived)
+            if sp and int(m4.group(1)) >= out.get("tune_window", 0):
+                out["tune_window"] = int(m4.group(1))
+                out["tune_speedup"] = float(sp.group(1))
+            continue  # the tuned/default pair carries no score-bytes probe
+        if name.endswith("_default"):
+            continue
         m3 = re.match(r"paged_attn_decode_w(\d+)", name)
         if m3:
             w = int(m3.group(1))
@@ -148,13 +161,15 @@ def render_markdown(entries: list[dict]) -> str:
         "",
         "| run | decode tok/s | packed weight HBM B | vs int8 | "
         "fused σ ratio | fused noisy µs | serve tok/s | attn-kernel tok/s | "
-        "paged KV B @25% | vs slot | score B (kernel) | vs exact |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "paged KV B @25% | vs slot | score B (kernel) | vs exact | "
+        "tuned speedup |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         m = e.get("metrics", {})
         lines.append(
-            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |"
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} "
+            "| {} |"
             .format(
                 str(e.get("label", "?"))[:24],
                 _fmt(m.get("decode_tok_s"), "{:.0f}"),
@@ -168,6 +183,7 @@ def render_markdown(entries: list[dict]) -> str:
                 _fmt(m.get("kv_win"), "{:.2f}×"),
                 _fmt(m.get("score_bytes_kernel"), "{:d}"),
                 _fmt(m.get("score_win"), "{:.0f}×"),
+                _fmt(m.get("tune_speedup"), "{:.2f}×"),
             ))
     shapes = {e.get("metrics", {}).get("decode_shape") for e in entries}
     shapes.discard(None)

@@ -67,6 +67,30 @@ def packed_col_sums(w_packed: jax.Array) -> jax.Array:
     return jnp.sum((wi & 15) + ((wi >> 4) & 15), axis=-2).astype(jnp.float32)
 
 
+def _resolve_tiles(x_codes, n: int, n_rows: int,
+                   bm: int | None, bn: int | None) -> tuple[int, int]:
+    """(bm, bn) for this MVM shape: explicit values win; None consults the
+    kernels.autotune cache (env `REPRO_TUNE_CACHE`) under the "cim_mvm"
+    kernel key — this is how core.engine.execute_mvm's Pallas backends,
+    which call these entry points with no tile kwargs, pick up tuned tiles
+    at dispatch. A miss keeps the (128, 128) defaults."""
+    if bm is not None and bn is not None:
+        return bm, bn
+    from repro.kernels import autotune
+    k = x_codes.shape[-1]
+    m = 1
+    for d in x_codes.shape[:-1]:
+        m *= d
+    tuned = autotune.lookup(
+        "cim_mvm", autotune.mvm_family(m, -(-k // n_rows), n),
+        backend="pallas") or {}
+    if bm is None:
+        bm = int(tuned.get("bm", 128) or 128)
+    if bn is None:
+        bn = int(tuned.get("bn", 128) or 128)
+    return max(1, bm), max(1, bn)
+
+
 def _pad_to(x: jax.Array, multiple: int, axis: int) -> jax.Array:
     size = x.shape[axis]
     pad = (-size) % multiple
@@ -112,7 +136,8 @@ def _prep_packed(x_codes, w_packed, n_rows: int, bm: int, bn: int):
 
 
 def cim_mvm_pallas_packed(x_codes: jax.Array, w_packed: jax.Array,
-                          cfg: MacroConfig, *, bm: int = 128, bn: int = 128,
+                          cfg: MacroConfig, *, bm: int | None = None,
+                          bn: int | None = None,
                           interpret: bool | None = None) -> jax.Array:
     """ŷ ≈ Σ X̃ W̃ with 4-bit-packed weights. x [..., K], w_packed [K2, M]
     with K ≤ 2·K2 (K2 = ceil(K/2) nibble pairs). K, M and the leading dims
@@ -121,6 +146,7 @@ def cim_mvm_pallas_packed(x_codes: jax.Array, w_packed: jax.Array,
     assert cfg.n_rows % 2 == 0, "nibble packing needs an even macro depth"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    bm, bn = _resolve_tiles(x_codes, w_packed.shape[1], cfg.n_rows, bm, bn)
     x2, w2, bm_eff, bn_eff, lead, m, n = _prep_packed(x_codes, w_packed,
                                                       cfg.n_rows, bm, bn)
     out = cim_mvm_grouped_packed(
@@ -131,7 +157,7 @@ def cim_mvm_pallas_packed(x_codes: jax.Array, w_packed: jax.Array,
 
 
 def cim_mvm_pallas(x_codes: jax.Array, w_codes: jax.Array, cfg: MacroConfig,
-                   *, bm: int = 128, bn: int = 128,
+                   *, bm: int | None = None, bn: int | None = None,
                    interpret: bool | None = None) -> jax.Array:
     """ŷ ≈ Σ X̃ W̃ through the fused BP kernel.
 
@@ -142,6 +168,7 @@ def cim_mvm_pallas(x_codes: jax.Array, w_codes: jax.Array, cfg: MacroConfig,
     assert cfg.scheme == Scheme.BP, "fused kernel implements BP only"
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
+    bm, bn = _resolve_tiles(x_codes, w_codes.shape[-1], cfg.n_rows, bm, bn)
     x2, w2, bm_eff, bn_eff, lead, m, n = _prep_dense(x_codes, w_codes,
                                                      cfg.n_rows, bm, bn)
     out = cim_mvm_grouped(
@@ -153,7 +180,7 @@ def cim_mvm_pallas(x_codes: jax.Array, w_codes: jax.Array, cfg: MacroConfig,
 
 def cim_mvm_pallas_noisy(x_codes: jax.Array, w_codes: jax.Array,
                          cfg: MacroConfig, *, noise_seed, inl_seed: int = 0,
-                         bm: int = 128, bn: int = 128,
+                         bm: int | None = None, bn: int | None = None,
                          interpret: bool | None = None) -> jax.Array:
     """Stochastic (NOISY/FULL) fused BP MVM: per-conversion thermal noise
     (and, at FULL, the Fig. 15 INL instance for cfg's inl_seed) drawn inside
@@ -168,6 +195,7 @@ def cim_mvm_pallas_noisy(x_codes: jax.Array, w_codes: jax.Array,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     st = stochastic_transfer_params(cfg)
+    bm, bn = _resolve_tiles(x_codes, w_codes.shape[-1], cfg.n_rows, bm, bn)
     x2, w2, bm_eff, bn_eff, lead, m, n = _prep_dense(x_codes, w_codes,
                                                      cfg.n_rows, bm, bn)
     out = cim_mvm_grouped_noisy(
@@ -181,8 +209,8 @@ def cim_mvm_pallas_noisy(x_codes: jax.Array, w_codes: jax.Array,
 
 def cim_mvm_pallas_noisy_packed(x_codes: jax.Array, w_packed: jax.Array,
                                 cfg: MacroConfig, *, noise_seed,
-                                inl_seed: int = 0, bm: int = 128,
-                                bn: int = 128,
+                                inl_seed: int = 0, bm: int | None = None,
+                                bn: int | None = None,
                                 interpret: bool | None = None) -> jax.Array:
     """Stochastic fused BP MVM over nibble-packed weights. Noise draws are a
     pure function of (seed, output coordinate, group) — independent of the
@@ -195,6 +223,7 @@ def cim_mvm_pallas_noisy_packed(x_codes: jax.Array, w_packed: jax.Array,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
     st = stochastic_transfer_params(cfg)
+    bm, bn = _resolve_tiles(x_codes, w_packed.shape[1], cfg.n_rows, bm, bn)
     x2, w2, bm_eff, bn_eff, lead, m, n = _prep_packed(x_codes, w_packed,
                                                       cfg.n_rows, bm, bn)
     out = cim_mvm_grouped_noisy_packed(

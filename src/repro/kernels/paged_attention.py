@@ -174,19 +174,29 @@ def _exact_attention(q, k_pool, v_pool, tables, positions, kv_len):
 # ---------------------------------------------------------------------------
 # "kernel" backend: fused Pallas flash decode/prefill over block tables
 # ---------------------------------------------------------------------------
-def _paged_attn_kernel(tables_ref, lens_ref, kvl_ref, q_ref, k_ref, v_ref,
-                       o_ref, m_ref, l_ref, acc_ref, *, scale: float,
-                       block_size: int, g: int):
-    """One (slot b, KV head h) program; sequential pass over the MB blocks.
+def _paged_attn_kernel(tables_ref, lens_ref, kvl_ref, q_ref, *refs,
+                       scale: float, block_size: int, g: int, kblocks: int,
+                       row_tile: int):
+    """One (slot b, KV head h, row tile r) program; sequential pass over
+    the MB blocks, `kblocks` logical blocks per step.
 
-    q_ref [1, 1, CG, dh] (CG = C·G query rows), k_ref/v_ref [1, bs, 1, dh]
-    — the slot's j-th logical block, fetched by the index map through the
-    scalar-prefetched table. Scratch holds the online-softmax state
-    (running max m, sum l, PV accumulator) in VMEM for the whole pass; the
-    only score tensor ever live is the [CG, bs] tile of this block.
+    q_ref [1, 1, RT, dh] (RT = row tile of the C·G query rows); the step's
+    KV arrives as `kblocks` separate [1, bs, 1, dh] refs — the slot's
+    logical blocks j·kblocks … j·kblocks+kblocks−1, each fetched by its own
+    index map through the scalar-prefetched table, so the pipeline double-
+    buffers a [kblocks·bs, dh] span per sequential step. Scratch holds the
+    online-softmax state (running max m, sum l, PV accumulator) in VMEM for
+    the whole pass; the only score tensor ever live is the
+    [RT, kblocks·bs] tile of this step.
     """
+    k_refs = refs[:kblocks]
+    v_refs = refs[kblocks:2 * kblocks]
+    o_ref = refs[2 * kblocks]
+    m_ref, l_ref, acc_ref = refs[2 * kblocks + 1:]
     b = pl.program_id(0)
-    j = pl.program_id(2)
+    r = pl.program_id(2)
+    j = pl.program_id(3)
+    span = kblocks * block_size
 
     @pl.when(j == 0)
     def _init():
@@ -196,21 +206,24 @@ def _paged_attn_kernel(tables_ref, lens_ref, kvl_ref, q_ref, k_ref, v_ref,
 
     kvl = kvl_ref[b]
 
-    # Blocks at or past the slot's valid length hold nothing attendable
-    # (every position masks to weight 0) — skip their MXU work entirely;
-    # their table entries point at the trash block anyway.
-    @pl.when(j * block_size < kvl)
+    # Steps whose whole span sits at or past the slot's valid length hold
+    # nothing attendable (every position masks to weight 0) — skip their
+    # MXU work entirely; their table entries point at the trash block
+    # anyway (including the pad entries appended to make MB divide).
+    @pl.when(j * span < kvl)
     def _block():
-        q = q_ref[0, 0].astype(jnp.float32)            # [CG, dh]
-        k = k_ref[0, :, 0, :].astype(jnp.float32)      # [bs, dh]
-        v = v_ref[0, :, 0, :].astype(jnp.float32)
-        cg = q.shape[0]
+        q = q_ref[0, 0].astype(jnp.float32)            # [RT, dh]
+        k = jnp.concatenate(                           # [span, dh]
+            [kr[0, :, 0, :] for kr in k_refs], axis=0).astype(jnp.float32)
+        v = jnp.concatenate(
+            [vr[0, :, 0, :] for vr in v_refs], axis=0).astype(jnp.float32)
+        rt = q.shape[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
-        pos_s = j * block_size \
-            + jax.lax.broadcasted_iota(jnp.int32, (cg, block_size), 1)
-        chunk_off = jax.lax.broadcasted_iota(jnp.int32, (cg, block_size),
-                                             0) // g
+        pos_s = j * span \
+            + jax.lax.broadcasted_iota(jnp.int32, (rt, span), 1)
+        row = r * rt + jax.lax.broadcasted_iota(jnp.int32, (rt, span), 0)
+        chunk_off = row // g
         pos_q = lens_ref[b] + chunk_off
         # the paged_prefill_attention mask exactly: causal within the chunk
         # AND inside the slot's valid window (trash/stale lanes land here)
@@ -230,7 +243,7 @@ def _paged_attn_kernel(tables_ref, lens_ref, kvl_ref, q_ref, k_ref, v_ref,
             + jnp.dot(p, v, preferred_element_type=jnp.float32)
         m_ref[...] = m_new
 
-    @pl.when(j == pl.num_programs(2) - 1)
+    @pl.when(j == pl.num_programs(3) - 1)
     def _finish():
         # idle lanes (kv_len = 0) keep l = 0 → emit 0, never NaN; their
         # outputs are discarded by the scheduler anyway
@@ -238,32 +251,49 @@ def _paged_attn_kernel(tables_ref, lens_ref, kvl_ref, q_ref, k_ref, v_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_size", "g", "interpret"))
+                   static_argnames=("block_size", "g", "interpret",
+                                    "kblocks", "row_tile"))
 def _paged_attn_call(q3, k_pool, v_pool, tables, lens, kvl, *,
-                     block_size: int, g: int, interpret: bool):
-    """pallas_call plumbing: q3 [B, KH, CG, dh] f32 → o [B, KH, CG, dh]."""
+                     block_size: int, g: int, interpret: bool,
+                     kblocks: int = 1, row_tile: int | None = None):
+    """pallas_call plumbing: q3 [B, KH, CG, dh] f32 → o [B, KH, CG, dh].
+
+    `tables` must already be padded to a multiple of `kblocks` (pad entries
+    point at the trash block); CG must divide by `row_tile`.
+    """
     b, kh, cg, dh = q3.shape
     mb = tables.shape[1]
+    assert mb % kblocks == 0, (mb, kblocks)
+    rt = cg if row_tile is None else row_tile
+    assert cg % rt == 0, (cg, rt)
     kern = functools.partial(_paged_attn_kernel,
                              scale=1.0 / math.sqrt(dh),
-                             block_size=block_size, g=g)
+                             block_size=block_size, g=g, kblocks=kblocks,
+                             row_tile=rt)
+
+    def _kv_map(i):
+        # i-th sub-block of the step's kblocks-wide span; default-arg bind
+        # so each spec closes over its own stride offset
+        return lambda b, h, r, j, t, ln, kv, i=i: (t[b, j * kblocks + i],
+                                                   0, h, 0)
+
+    kv_spec = [pl.BlockSpec((1, block_size, 1, dh), _kv_map(i))
+               for i in range(kblocks)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(b, kh, mb),
+        grid=(b, kh, cg // rt, mb // kblocks),
         in_specs=[
-            pl.BlockSpec((1, 1, cg, dh),
-                         lambda b, h, j, t, ln, kv: (b, h, 0, 0)),
-            pl.BlockSpec((1, block_size, 1, dh),
-                         lambda b, h, j, t, ln, kv: (t[b, j], 0, h, 0)),
-            pl.BlockSpec((1, block_size, 1, dh),
-                         lambda b, h, j, t, ln, kv: (t[b, j], 0, h, 0)),
+            pl.BlockSpec((1, 1, rt, dh),
+                         lambda b, h, r, j, t, ln, kv: (b, h, r, 0)),
+            *kv_spec,          # kblocks K blocks …
+            *kv_spec,          # … then the matching V blocks
         ],
-        out_specs=pl.BlockSpec((1, 1, cg, dh),
-                               lambda b, h, j, t, ln, kv: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, rt, dh),
+                               lambda b, h, r, j, t, ln, kv: (b, h, r, 0)),
         scratch_shapes=[
-            pltpu.VMEM((cg, 1), jnp.float32),    # running max m
-            pltpu.VMEM((cg, 1), jnp.float32),    # running sum l
-            pltpu.VMEM((cg, dh), jnp.float32),   # PV accumulator
+            pltpu.VMEM((rt, 1), jnp.float32),    # running max m
+            pltpu.VMEM((rt, 1), jnp.float32),    # running sum l
+            pltpu.VMEM((rt, dh), jnp.float32),   # PV accumulator
         ],
     )
     return pl.pallas_call(
@@ -271,14 +301,41 @@ def _paged_attn_call(q3, k_pool, v_pool, tables, lens, kvl, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kh, cg, dh), jnp.float32),
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
         interpret=interpret,
     )(tables.astype(jnp.int32), lens.astype(jnp.int32),
-      kvl.astype(jnp.int32), q3.astype(jnp.float32), k_pool, v_pool)
+      kvl.astype(jnp.int32), q3.astype(jnp.float32),
+      *([k_pool] * kblocks), *([v_pool] * kblocks))
+
+
+def _resolve_attn_config(*, window: int, c: int, mb: int, cg: int):
+    """(kblocks, row_tile) for this shape, tuning cache first.
+
+    Consults kernels.autotune (env `REPRO_TUNE_CACHE`) under the
+    "paged_attn" kernel key and the decode/prefill shape family; a miss —
+    or no cache at all — keeps the PR-5 defaults (one block per step, one
+    row tile). Values are clamped to the actual geometry so a cache tuned
+    on a bigger shape family can never produce an invalid grid.
+    """
+    from repro.kernels import autotune
+    cfg = autotune.lookup("paged_attn",
+                          autotune.attn_family(window, c),
+                          backend="kernel")
+    kblocks = 1
+    row_tile = None
+    if cfg:
+        kblocks = max(1, min(int(cfg.get("kblocks", 1) or 1), mb))
+        row_tile = cfg.get("row_tile")
+        if row_tile:
+            row_tile = max(1, min(int(row_tile), cg))
+    return kblocks, row_tile
 
 
 def paged_flash_attention(q, k_pool, v_pool, tables, lens, kv_len, *,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          kblocks: int | None = None,
+                          row_tile: int | None = None):
     """Flash-style paged attention: q [B, C, H, dh] × pools [NB, bs, KH, dh]
     through per-slot block tables [B, MB] → [B, C, H, dh].
 
@@ -287,6 +344,12 @@ def paged_flash_attention(q, k_pool, v_pool, tables, lens, kv_len, *,
     writes. GQA rows are folded as C·G so decode (C=1) and chunked prefill
     share one kernel; pools stay in their storage dtype and are upcast
     per-block in VMEM.
+
+    kblocks / row_tile (None → tuning cache, default 1 / single tile)
+    control the pipeline shape: each sequential grid step fetches `kblocks`
+    logical KV blocks (tables are padded with trash entries to divide), and
+    the C·G query rows split into `row_tile`-high parallel tiles (rows are
+    padded with dummy queries to divide — their outputs are sliced away).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -294,11 +357,29 @@ def paged_flash_attention(q, k_pool, v_pool, tables, lens, kv_len, *,
     kh = k_pool.shape[2]
     g = h // kh
     bs = k_pool.shape[1]
+    mb = tables.shape[1]
+    cg = c * g
+    if kblocks is None and row_tile is None:
+        kblocks, row_tile = _resolve_attn_config(window=mb * bs, c=c,
+                                                 mb=mb, cg=cg)
+    kblocks = max(1, min(kblocks or 1, mb))
+    if row_tile is not None and (row_tile <= 0 or row_tile >= cg):
+        row_tile = None
+    if mb % kblocks:
+        pad = kblocks - mb % kblocks     # pad entries → trash block 0
+        tables = jnp.pad(tables, ((0, 0), (0, pad)))
     # [B, C, KH, G, dh] → [B, KH, C·G, dh]: row r = chunk_off·G + g_idx
     q3 = q.reshape(b, c, kh, g, dh).transpose(0, 2, 1, 3, 4) \
-          .reshape(b, kh, c * g, dh)
+          .reshape(b, kh, cg, dh)
+    cg_p = cg
+    if row_tile is not None and cg % row_tile:
+        cg_p = -(-cg // row_tile) * row_tile
+        q3 = jnp.pad(q3, ((0, 0), (0, 0), (0, cg_p - cg), (0, 0)))
     out = _paged_attn_call(q3, k_pool, v_pool, tables, lens, kv_len,
-                           block_size=bs, g=g, interpret=interpret)
+                           block_size=bs, g=g, interpret=interpret,
+                           kblocks=kblocks, row_tile=row_tile)
+    if cg_p != cg:
+        out = out[:, :, :cg, :]
     out = out.reshape(b, kh, c, g, dh).transpose(0, 2, 1, 3, 4) \
              .reshape(b, c, h, dh)
     return out.astype(q.dtype)
@@ -308,6 +389,79 @@ def paged_flash_attention(q, k_pool, v_pool, tables, lens, kv_len, *,
 def _kernel_attention(q, k_pool, v_pool, tables, positions, kv_len):
     lens = positions[:, 0].astype(jnp.int32)  # chunk base = first q position
     return paged_flash_attention(q, k_pool, v_pool, tables, lens, kv_len)
+
+
+# ---------------------------------------------------------------------------
+# fused decode write-scatter: paged_write's .at[].set moved into a kernel
+# ---------------------------------------------------------------------------
+def _fused_write_kernel(wblk_ref, woff_ref, wval_ref, nk_ref, nv_ref,
+                        k_ref, v_ref, ko_ref, vo_ref, *, block_size: int):
+    """One slot per (sequential) grid step: the slot's target pool block
+    arrives via the scalar-prefetched write-block id, the new K/V row is
+    blended in at the write offset, and the block is written straight back
+    (the pools are input/output aliased, so untouched blocks never move).
+    Invalid lanes (write target = the trash block) write their block back
+    unmodified — unlike `models.common.paged_write`, the trash block's row
+    0 is never clobbered, which only ever differs in never-attended bits.
+    """
+    b = pl.program_id(0)
+    off = woff_ref[b]
+    valid = wval_ref[b]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (1, block_size, 1, 1), 1)
+    sel = (rows == off) & (valid != 0)
+    ko_ref[...] = jnp.where(sel, nk_ref[...], k_ref[...])
+    vo_ref[...] = jnp.where(sel, nv_ref[...], v_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fused_write_call(k_pool, v_pool, new_k, new_v, wblk, woff, wval, *,
+                      interpret: bool):
+    nb, bs, kh, dh = k_pool.shape
+    b = new_k.shape[0]
+    kern = functools.partial(_fused_write_kernel, block_size=bs)
+    new_spec = pl.BlockSpec((1, 1, kh, dh),
+                            lambda b, t, o, v: (b, 0, 0, 0))
+    pool_spec = pl.BlockSpec((1, bs, kh, dh),
+                             lambda b, t, o, v: (t[b], 0, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b,),
+        in_specs=[new_spec, new_spec, pool_spec, pool_spec],
+        out_specs=[pool_spec, pool_spec],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+                   jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype)],
+        # pools alias their outputs (operand indices count the 3 scalar-
+        # prefetch refs): blocks no grid step visits keep their bytes
+        input_output_aliases={5: 0, 6: 1},
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(wblk.astype(jnp.int32), woff.astype(jnp.int32),
+      wval.astype(jnp.int32), new_k.astype(k_pool.dtype),
+      new_v.astype(v_pool.dtype), k_pool, v_pool)
+
+
+def fused_paged_write(k_pool, v_pool, new_k, new_v, flat_idx, *,
+                      interpret: bool | None = None):
+    """Kernel-side decode write: scatter each slot's new K/V row (C = 1)
+    into its pool block without the host-visible `.at[].set` round trip.
+
+    new_k / new_v [B, 1, KH, dh]; flat_idx [B, 1] flat (block·bs + offset)
+    write targets as built by transformer.paged_step — 0 marks an invalid
+    lane (paged_write would park it in the trash block; here it is a
+    no-op, the only deliberate divergence). Returns the updated pools.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    bs = k_pool.shape[1]
+    fi = flat_idx.reshape(-1).astype(jnp.int32)
+    return _fused_write_call(k_pool, v_pool, new_k, new_v,
+                             fi // bs, fi % bs, (fi != 0).astype(jnp.int32),
+                             interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

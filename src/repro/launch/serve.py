@@ -12,6 +12,12 @@
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --paged --attn kernel [--cim bp --act-scale static]
 
+  # consume a tuning cache from `kernel_bench --autotune`: dispatchers read
+  # it via $REPRO_TUNE_CACHE; a tuned pool block size applies when
+  # --block-size is not pinned explicitly
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --paged --attn kernel --tune-cache tune_cache.json
+
   REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host [--paged]
       # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
@@ -55,8 +61,16 @@ def main():
                          "prefill through the unified jit'd step (decode is "
                          "the C=1 compilation); composes with --cim "
                          "bp-prequant (PackedCodes weights) and --mesh host")
-    ap.add_argument("--block-size", type=int, default=16,
-                    help="tokens per KV block (paged engine)")
+    ap.add_argument("--block-size", type=int, default=None,
+                    help="tokens per KV block (paged engine); default 16, "
+                         "or the tuned layout when --tune-cache has one "
+                         "for this window")
+    ap.add_argument("--tune-cache", default=None, metavar="PATH",
+                    help="kernel tuning cache from `kernel_bench "
+                         "--autotune` — exported as $REPRO_TUNE_CACHE so "
+                         "the attention/MVM dispatchers pick up tuned "
+                         "configs, and consulted for a tuned paged-pool "
+                         "block size when --block-size is not given")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="usable blocks in the pool (default: slot-cache "
                          "parity, slots × max-len / block-size)")
@@ -94,6 +108,21 @@ def main():
                          "devices) — executes the mesh-sharded CIM engine "
                          "end-to-end")
     args = ap.parse_args()
+
+    if args.tune_cache:
+        os.environ["REPRO_TUNE_CACHE"] = args.tune_cache
+    if args.block_size is None:
+        args.block_size = 16
+        if args.paged and args.tune_cache:
+            from repro.kernels import autotune
+            tuned = autotune.lookup("paged_attn",
+                                    autotune.attn_family(args.max_len, 1),
+                                    "kernel")
+            if tuned and isinstance(tuned.get("block_size"), int) \
+                    and args.max_len % tuned["block_size"] == 0:
+                args.block_size = tuned["block_size"]
+                print(f"tuned paged-pool block_size={args.block_size} "
+                      f"(from {args.tune_cache})")
 
     mesh_ctx = contextlib.nullcontext()
     if args.mesh == "host":

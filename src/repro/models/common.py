@@ -398,10 +398,17 @@ def paged_attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     and attends with per-slot lengths through the attention-backend
     registry (kernels.paged_attention, selected by cfg.attn_backend):
     "exact" gathers the window and runs the one-pass softmax, "kernel" is
-    the Pallas flash path that consumes the pool + tables directly.
+    the Pallas flash path that consumes the pool + tables directly. On the
+    kernel path, decode (C = 1) also scatters this step's K/V rows through
+    the fused Pallas write kernel instead of the host-visible `.at[].set`
+    (bit-identical pools outside the never-attended trash block).
     Returns (y, updated layer pool).
     """
-    from repro.kernels.paged_attention import paged_attention
+    from repro.kernels.paged_attention import (paged_attention,
+                                               choose_attn_backend,
+                                               get_attn_backend,
+                                               fused_paged_write)
+    from repro.parallel import sharding
     b, c, _ = x.shape
     dh = cfg.head_dim
     q = dense(p, x, cfg, w="wq", b="bq").reshape(b, c, cfg.n_heads, dh)
@@ -411,8 +418,16 @@ def paged_attention_apply(p: Params, x: jax.Array, cfg: ModelConfig, *,
     if cfg.pos_embed == "rope":
         q = rope(q, positions, cfg.rope_theta, _rope_dims(cfg))
         k1 = rope(k1, positions, cfg.rope_theta, _rope_dims(cfg))
-    k_pool = paged_write(cache["k"], k1, flat_idx)
-    v_pool = paged_write(cache["v"], v1, flat_idx)
+    fused = (c == 1
+             and get_attn_backend(choose_attn_backend(cfg.attn_backend)).pallas
+             and sharding.get_mesh() is None
+             and not sharding.in_shard_context())
+    if fused:
+        k_pool, v_pool = fused_paged_write(cache["k"], cache["v"], k1, v1,
+                                           flat_idx)
+    else:
+        k_pool = paged_write(cache["k"], k1, flat_idx)
+        v_pool = paged_write(cache["v"], v1, flat_idx)
     o = paged_attention(q, k_pool, v_pool, tables, positions=positions,
                         kv_len=kv_len, backend=cfg.attn_backend)
     o = o.reshape(b, c, cfg.n_heads * dh)

@@ -181,12 +181,15 @@ def _expert_ffn(buf: jax.Array, wg, wu, wd, cfg: ModelConfig, train: bool):
 
 
 def _local_moe(x2, router_w, wg, wu, wd, cfg: ModelConfig, *, train: bool,
-               capacity: int, e_offset: int = 0):
+               capacity: int, e_offset: int = 0, stats: bool = False):
     """Dispatch x2's tokens to the experts in wg/wu/wd (a contiguous slice
     [e_offset, e_offset + E_local)), compute, and combine. Tokens routed
     elsewhere contribute zero — callers psum across expert shards.
 
-    Returns (y2 [T, D], aux_loss).
+    Returns (y2 [T, D], aux_loss); with stats=True the second element is
+    instead the UN-normalized router stats (me_sum [E], pe_sum [E]) so a
+    sharded caller can psum them for an exact global load-balance loss
+    (the same contract _a2a_core exposes).
     """
     t, d = x2.shape
     e_local = _e_local(wg)
@@ -213,6 +216,11 @@ def _local_moe(x2, router_w, wg, wu, wd, cfg: ModelConfig, *, train: bool,
     y2 = jnp.zeros((t, d), out.dtype).at[token_idx].add(y_choices)
 
     # Switch-style load-balance loss (real experts only).
+    if stats:
+        me_sum = jnp.sum(jax.nn.one_hot(ids_flat, cfg.moe.n_experts,
+                                        dtype=jnp.float32), axis=0)
+        pe_sum = jnp.sum(probs, axis=0)
+        return y2, (me_sum, pe_sum)
     me = jnp.mean(jax.nn.one_hot(ids_flat, cfg.moe.n_experts,
                                  dtype=jnp.float32), axis=0)
     pe = jnp.mean(probs, axis=0)
@@ -239,11 +247,51 @@ def apply(p: dict, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
 
     if mesh is None or "model" not in mesh.axis_names \
             or padded_experts(cfg.moe.n_experts) % mesh.shape["model"] != 0:
-        x2 = x.reshape(b * t, d)
-        cap = _capacity(b * t, cfg)
-        y2, aux = _local_moe(x2, p["router"], wg, wu, wd,
-                             cfg, train=train, capacity=cap)
-        return y_shared + y2.reshape(b, t, d).astype(x.dtype), aux
+        batch_axes = (sharding.resolve("batch") or ()) \
+            if mesh is not None else ()
+        n_b = math.prod(mesh.shape[a] for a in batch_axes) \
+            if batch_axes else 1
+        if mesh is None or sharding.in_shard_context() or n_b <= 1 \
+                or b % n_b:
+            # truly local: no mesh, already tracing per-shard, or the
+            # batch cannot divide — every device computes the full set
+            x2 = x.reshape(b * t, d)
+            cap = _capacity(b * t, cfg)
+            y2, aux = _local_moe(x2, p["router"], wg, wu, wd,
+                                 cfg, train=train, capacity=cap)
+            return y_shared + y2.reshape(b, t, d).astype(x.dtype), aux
+        # Non-divisible experts under an active mesh: the expert axis
+        # cannot shard, but the batch still can. Run the full expert set
+        # per shard on its batch slice INSIDE shard_map — the in-shard
+        # guard keeps the vmapped CIM expert kernels off nested mesh
+        # dispatch — and psum the raw router stats over the batch axes
+        # for an exact global load-balance loss.
+        cap = _capacity((b // n_b) * t, cfg)
+        ntot = b * t
+
+        def fb_fn(x_l, router_w, wg_l, wu_l, wd_l):
+            bl, tl, dl = x_l.shape
+            y2, (me_sum, pe_sum) = _local_moe(
+                x_l.reshape(bl * tl, dl), router_w, wg_l, wu_l, wd_l,
+                cfg, train=train, capacity=cap, stats=True)
+            me_sum = jax.lax.psum(me_sum, batch_axes)
+            pe_sum = jax.lax.psum(pe_sum, batch_axes)
+            aux = cfg.moe.n_experts * jnp.sum(
+                me_sum / (ntot * cfg.moe.top_k) * (pe_sum / ntot))
+            return y2.reshape(bl, tl, dl), aux
+
+        def _rep(tree):
+            return jax.tree.map(lambda l: P(*(None,) * jnp.ndim(l)), tree)
+
+        x_spec = P(batch_axes, None, None)
+        y2, aux = sharding.shard_map(
+            fb_fn, mesh=mesh,
+            in_specs=(x_spec, _rep(p["router"]), _rep(wg), _rep(wu),
+                      _rep(wd)),
+            out_specs=(x_spec, P()),
+            check_vma=False,
+        )(x, p["router"], wg, wu, wd)
+        return y_shared + y2.astype(x.dtype), aux
 
     # --- expert-parallel shard_map --------------------------------------
     batch_axes = sharding.resolve("batch") or ()

@@ -161,10 +161,18 @@ PARAM_RULES: dict[str, tuple] = {
     "pos_embed": (None, "fsdp"),      # [S, D] learned positions
     # attention
     "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
-    "wo": ("tp", "fsdp"),
+    "wo": ("fsdp", "tp"),
     "bq": ("tp",), "bk": ("tp",), "bv": ("tp",), "bo": (None,),
-    # mlp
-    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"), "w_down": ("tp", "fsdp"),
+    # mlp — down/out projections store N-over-"tp" like the up projections:
+    # the CIM engine shards EVERY mvm the same way (K over "data", output
+    # channels over "model" — sharding.mvm_plan), and the jnp scan backend
+    # reshapes K into [groups, n_rows, N] whose group boundaries never align
+    # with a K-split. Keeping N on "model" lets GSPMD carry the stored
+    # sharding through pad+reshape into the grouped scan / shard_map in_spec
+    # with a local slice only (the Megatron row-parallel (K,"tp") layout
+    # forced an involuntary full rematerialization of every scanned
+    # down-projection on the 512-chip mesh).
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"), "w_down": ("fsdp", "tp"),
     # norms / scalars
     "scale": (None,), "bias": (None,), "w_lambda": (None,),
     # MLA
@@ -176,7 +184,7 @@ PARAM_RULES: dict[str, tuple] = {
     "e_gate": ("expert", "fsdp", None), "e_up": ("expert", "fsdp", None),
     "e_down": ("expert", None, "fsdp"),
     # SSM / RWKV
-    "w_in": ("fsdp", "tp"), "w_out": ("tp", "fsdp"),
+    "w_in": ("fsdp", "tp"), "w_out": ("fsdp", "tp"),
     "w_x": ("fsdp", "tp"), "conv_w": (None, "tp"), "conv_b": ("tp",),
     "a_log": ("tp",), "dt_bias": ("tp",), "d_skip": ("tp",),
     "w_r": ("fsdp", "tp"), "w_k": ("fsdp", "tp"), "w_v": ("fsdp", "tp"),

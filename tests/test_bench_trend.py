@@ -36,6 +36,16 @@ def _doc(us_decode=400.0, ratio=1.02):
                         "(128x less)"},
             {"name": "serve_decode_paged_attnkernel_s4_r4", "us": 95000.0,
              "derived": "decode_tok_s=9.5|exact_tok_s=11.0|ratio=0.864"},
+            # schema-v4 autotune rows: the tuned/default pair must feed the
+            # speedup column only — neither row carries a score-byte probe,
+            # and the w4096 name must NOT clobber the score-window metric
+            {"name": "paged_attn_decode_w4096_default", "us": 34000.0,
+             "derived": "block_size=16|kblocks=1|row_tile=None"},
+            {"name": "paged_attn_decode_w4096_tuned", "us": 5600.0,
+             "derived": "default_us=34000.0|speedup=6.07x|block_size=128|"
+                        "kblocks=1|row_tile=None"},
+            {"name": "cim_mvm_m64_g2_n64_tuned", "us": 206.0,
+             "derived": "default_us=285.0|speedup=1.38x|bm=128|bn=64"},
         ],
     }
 
@@ -61,6 +71,10 @@ def test_extract_metrics():
     assert m["score_bytes_exact"] == 8192
     assert m["score_bytes_kernel"] == 64
     assert m["score_win"] == pytest.approx(128.0)
+    # schema-v4 autotune pair: speedup extracted from the tuned row; the
+    # w4096 tuned/default names don't disturb the score-window probe above
+    assert m["tune_window"] == 4096
+    assert m["tune_speedup"] == pytest.approx(6.07)
 
 
 def test_extract_metrics_tolerates_missing_rows():
@@ -95,9 +109,10 @@ def test_history_append_and_render(tmp_path):
     assert "20000" in md    # 8 tok / 400 µs
     assert "2.00×" in md and "36864" in md
     assert "9.5" in md and "128×" in md    # v3 attn-kernel + score probe
-    # table stays well-formed: every data row has the 12 columns
+    assert "6.07×" in md                   # v4 tuned-vs-default speedup
+    # table stays well-formed: every data row has the 13 columns
     rows = [ln for ln in md.splitlines() if ln.startswith("| run-")]
-    assert all(ln.count("|") == 13 for ln in rows)
+    assert all(ln.count("|") == 14 for ln in rows)
 
 
 def test_one_shot_mode(tmp_path):

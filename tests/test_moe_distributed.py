@@ -172,8 +172,9 @@ sharding.set_mesh(None)
 y_local, aux_local = moe.apply(p, x, cfg, train=False)
 
 # model axis of 3 does NOT divide the 16 padded experts -> apply() takes the
-# LOCAL fallback branch even though a mesh is active: every device computes
-# the full expert set under plain GSPMD (no EP shard_map).
+# batch-sharded fallback: every shard computes the FULL expert set on its
+# own batch slice inside shard_map (expert compute is not expert-parallel,
+# but the tokens are data-parallel and the vmapped kernels trace in-shard).
 mesh = make_host_mesh(2, 3)
 assert moe.padded_experts(cfg.moe.n_experts) % mesh.shape["model"] != 0
 sharding.set_mesh(mesh)
@@ -182,43 +183,50 @@ with mesh:
         lambda pp, xx: moe.apply(pp, xx, cfg, train=False))(p, x)
 np.testing.assert_allclose(np.asarray(y_mesh), np.asarray(y_local),
                            rtol=2e-5, atol=2e-5)
+# aux is EXACT now: the fallback psums the raw (me_sum, pe_sum) router
+# stats over the batch axes instead of averaging shard-local estimators
 np.testing.assert_allclose(float(aux_mesh), float(aux_local), rtol=1e-5)
 
-# CURRENT (pinned) semantics: outputs replicate across the whole mesh —
-# the expert compute is NOT expert-parallel in this fallback. The ROADMAP
-# open item tracks sharding it; when that lands, this pin must be updated.
+# The fallback routes through sharding.shard_map over the batch axes: the
+# output is batch-sharded over "data", NOT fully replicated (the PR-5 pin
+# this test used to carry — the ROADMAP item that landed here).
 from jax.sharding import NamedSharding, PartitionSpec as P
 sh = y_mesh.sharding
-assert sh.is_fully_replicated, f"fallback output unexpectedly sharded: {sh}"
+assert not sh.is_fully_replicated, f"fallback output not sharded: {sh}"
+assert sh.spec[0] == ("data",) or sh.spec[0] == "data", sh.spec
 
 # CIM prequant packed experts under the same fallback: _expert_ffn vmaps
-# the engine entry point over the expert axis, so the _under_vmap guard
-# must keep auto backend selection OFF the shard_map dispatch (a shard_map
-# cannot nest under vmap). Pin: it compiles, runs, and agrees with the
-# no-mesh packed reference.
+# the engine entry point over the expert axis, so the in-shard-context +
+# _under_vmap guards must keep auto backend selection OFF nested mesh
+# dispatch (a shard_map cannot nest under vmap). Each shard re-calibrates
+# the dynamic activation scale over its OWN batch slice (same as the a2a
+# dispatch layout), so agreement with the local packed reference is at the
+# 4-bit-requantization scale, not bitwise — pin it to the same order as
+# the local quantization error vs float.
 cfg_cim = dataclasses.replace(cfg, cim=CIMConfig(enabled=True))
 pq = quantize_params(p, cfg_cim, packed=True)
 sharding.set_mesh(None)
 yq_local, _ = moe.apply(pq, x, cfg_cim, train=False)
+err_ref = float(np.max(np.abs(np.asarray(yq_local - y_local))))
 sharding.set_mesh(mesh)
 with mesh:
     yq_mesh, _ = jax.jit(
         lambda pp, xx: moe.apply(pp, xx, cfg_cim, train=False))(pq, x)
-np.testing.assert_allclose(np.asarray(yq_mesh), np.asarray(yq_local),
-                           rtol=2e-5, atol=2e-5)
+err_mesh = float(np.max(np.abs(np.asarray(yq_mesh - y_local))))
+assert err_mesh < 3 * max(err_ref, 1e-6), (err_mesh, err_ref)
 print("MOE_NON_DIVISIBLE_OK")
 """
 
 
 @pytest.mark.slow
 def test_moe_non_divisible_experts_local_fallback():
-    """ROADMAP open item, pinned as a regression baseline: a mesh whose
-    model axis (3) cannot divide the padded experts (16) falls back to the
-    local MoE path under GSPMD — outputs match the no-mesh reference but
-    replicate across devices (unsharded expert compute), and the
-    `_under_vmap` guard keeps the vmapped CIM expert kernels off the
-    shard_map dispatch. When the eventual fix shards this path, the
-    replication assertion here is the contract to update."""
+    """A mesh whose model axis (3) cannot divide the padded experts (16)
+    falls back to a BATCH-sharded local MoE: each shard runs the full
+    expert set on its own batch slice inside shard_map, the raw router
+    stats psum to an exact global aux loss, and the in-shard guard keeps
+    the vmapped CIM expert kernels off nested mesh dispatch. Outputs match
+    the no-mesh reference and are sharded over "data" (the former
+    fully-replicated pin this test carried as a ROADMAP open item)."""
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
     env.pop("XLA_FLAGS", None)

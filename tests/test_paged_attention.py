@@ -193,6 +193,108 @@ def test_stale_block_tail_poison_invariance():
 
 
 # ---------------------------------------------------------------------------
+# multi-block pipeline (kblocks > 1) and wide row tiles
+# ---------------------------------------------------------------------------
+@needs_pallas
+@pytest.mark.parametrize("kblocks", [2, 4])
+@pytest.mark.parametrize("c", [1, 4])
+def test_kblocks_parity(kblocks, c):
+    """Fetching kblocks KV blocks per sequential grid step must match the
+    single-block pipeline AND the exact backend at mixed depths, for both
+    decode and chunked prefill. mb=5 is not divisible by 2 or 4, so the
+    block-table padding (trash block 0 on the tail) is exercised too."""
+    case = _make_case(53 + kblocks + c, b=3, mb=5, c=c)
+    q, kp, vp, tables, positions, kvl = case
+    lens = kvl - c
+    o_one = pa.paged_flash_attention(q, kp, vp, tables, lens, kvl, kblocks=1)
+    o_multi = pa.paged_flash_attention(q, kp, vp, tables, lens, kvl,
+                                       kblocks=kblocks)
+    o_exact = _run("exact", case)
+    assert jnp.allclose(o_multi, o_one, atol=2e-6, rtol=2e-6), \
+        float(jnp.max(jnp.abs(o_multi - o_one)))
+    assert jnp.allclose(o_multi, o_exact, atol=2e-5, rtol=2e-5)
+
+
+@needs_pallas
+@pytest.mark.parametrize("row_tile", [3, 4])
+def test_row_tile_parity(row_tile):
+    """Wider C·G row tiles (dividing and non-dividing — the latter pads the
+    folded q rows) agree with the single-tile kernel and exact."""
+    case = _make_case(59 + row_tile, b=2, kh=2, g=2, mb=6, c=4)  # cg = 8
+    q, kp, vp, tables, positions, kvl = case
+    lens = kvl - 4
+    o_one = pa.paged_flash_attention(q, kp, vp, tables, lens, kvl)
+    o_tiled = pa.paged_flash_attention(q, kp, vp, tables, lens, kvl,
+                                       kblocks=2, row_tile=row_tile)
+    assert jnp.allclose(o_tiled, o_one, atol=2e-6, rtol=2e-6), \
+        float(jnp.max(jnp.abs(o_tiled - o_one)))
+    assert jnp.allclose(o_tiled, _run("exact", case), atol=2e-5, rtol=2e-5)
+
+
+@needs_pallas
+@pytest.mark.parametrize("poison", [float("nan"), 1e6])
+def test_kblocks_trash_poison_invariance(poison):
+    """The padded table tail and masked sub-blocks of the multi-block fetch
+    all point at trash block 0 — poisoning it must not move a bit even when
+    several sub-blocks of one fetch straddle the valid/trash boundary."""
+    case = _make_case(67, b=3, mb=5, c=1)
+    q, kp, vp, tables, positions, kvl = case
+    lens = kvl - 1
+    kp_p = kp.at[0].set(poison)
+    vp_p = vp.at[0].set(poison)
+    for kwargs in ({"kblocks": 4}, {"kblocks": 2, "row_tile": 2}):
+        clean = pa.paged_flash_attention(q, kp, vp, tables, lens, kvl,
+                                         **kwargs)
+        dirty = pa.paged_flash_attention(q, kp_p, vp_p, tables, lens, kvl,
+                                         **kwargs)
+        assert jnp.array_equal(clean, dirty), kwargs
+
+
+# ---------------------------------------------------------------------------
+# fused decode write-scatter
+# ---------------------------------------------------------------------------
+@needs_pallas
+def test_fused_write_bit_identity():
+    """fused_paged_write must land each slot's new K/V row bit-identically
+    to the host-side paged_write on every real block; the trash block (the
+    one deliberate divergence: invalid lanes become no-ops instead of trash
+    writes) is untouched."""
+    from repro.models import common
+    case = _make_case(71, b=3, mb=5, c=1)
+    q, kp, vp, tables, positions, kvl = case
+    b, kh, dh = q.shape[0], kp.shape[2], kp.shape[3]
+    bs = kp.shape[1]
+    key = jax.random.PRNGKey(91)
+    new_k = jax.random.normal(key, (b, 1, kh, dh), jnp.float32)
+    new_v = jax.random.normal(jax.random.fold_in(key, 1), (b, 1, kh, dh),
+                              jnp.float32)
+    # valid write targets: slot s appends at kv_len[s]-1 inside its last
+    # allocated block; slot 0 is forced invalid (flat_idx 0)
+    flat = []
+    for s in range(b):
+        pos = int(kvl[s]) - 1
+        blk = int(tables[s, pos // bs])
+        flat.append(blk * bs + pos % bs)
+    flat[0] = 0
+    flat_idx = jnp.asarray(flat, jnp.int32)[:, None]
+    ref_k = common.paged_write(kp, new_k, flat_idx)
+    ref_v = common.paged_write(vp, new_v, flat_idx)
+    got_k, got_v = pa.fused_paged_write(kp, vp, new_k, new_v, flat_idx)
+    assert jnp.array_equal(ref_k[1:], got_k[1:])
+    assert jnp.array_equal(ref_v[1:], got_v[1:])
+    # trash block: fused keeps the original storage (no-op write)
+    assert jnp.array_equal(got_k[0], kp[0])
+    assert jnp.array_equal(got_v[0], vp[0])
+    # and attention over the written pools agrees bit-for-bit, since the
+    # divergent bits live in storage that is never read unmasked
+    o_ref = pa.paged_attention(q, ref_k, ref_v, tables, positions=positions,
+                               kv_len=kvl, backend="kernel")
+    o_got = pa.paged_attention(q, got_k, got_v, tables, positions=positions,
+                               kv_len=kvl, backend="kernel")
+    assert jnp.array_equal(o_ref, o_got)
+
+
+# ---------------------------------------------------------------------------
 # mesh dispatch
 # ---------------------------------------------------------------------------
 @needs_pallas
