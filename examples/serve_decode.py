@@ -14,7 +14,7 @@ import numpy as np
 from repro.configs.registry import SMOKES
 from repro.core.cim_matmul import CIMConfig
 from repro.models import registry
-from repro.runtime.server import Request, Server
+from repro.runtime.server import Request, Server, ServingConfig
 
 
 def main():
@@ -31,8 +31,9 @@ def main():
     if args.cim:
         cfg = cfg.replace(cim=CIMConfig(enabled=True))
     params = registry.init_params(jax.random.PRNGKey(0), cfg, max_seq=96)
-    server = Server(params, cfg, n_slots=args.slots, max_len=96,
-                    paged=args.paged, block_size=8, prefill_chunk=8)
+    server = Server(params, cfg, ServingConfig(
+        n_slots=args.slots, max_len=96, paged=args.paged, block_size=8,
+        prefill_chunk=8))
 
     rng = np.random.RandomState(0)
     reqs = []

@@ -38,7 +38,12 @@ Tracked columns (parsed from the bench rows; missing rows render as "—"):
   * (schema v4) the autotune sweep: tuned-vs-default speedup of the
     W=4096 decode paged-attention family (`paged_attn_decode_w4096_tuned`
     vs its `_default` twin, from `kernel_bench --autotune`) — the number
-    the bench-smoke job gates at ≥ 1.25×.
+    the bench-smoke job gates at ≥ 1.25×;
+  * (schema v5) the shared-prefix serving row: peak decode lanes of the
+    prefix-sharing paged pool vs the same pool with sharing disabled (the
+    ×-concurrency factor the bench-smoke job gates at > 5×), plus the
+    prefill tokens the trie absorbed — deterministic lane/token counts,
+    platform-free.
 """
 from __future__ import annotations
 
@@ -110,6 +115,16 @@ def extract_metrics(doc: dict) -> dict:
                 out["score_bytes_exact"] = int(sb.group(1))
                 out["score_bytes_kernel"] = int(sb.group(2))
                 out["score_win"] = float(sb.group(3))
+        if name.startswith("serve_shared_prefix"):
+            pl = re.search(r"shared=(\d+) nosharing=(\d+) \(([\d.]+)x",
+                           derived)
+            if pl:
+                out["prefix_lanes"] = int(pl.group(1))
+                out["prefix_lanes_base"] = int(pl.group(2))
+                out["prefix_win"] = float(pl.group(3))
+            ts = re.search(r"prefill_tok_saved=(\d+)", derived)
+            if ts:
+                out["prefix_tok_saved"] = int(ts.group(1))
         if name.startswith("serve_kv_bytes_occ25"):
             kb = re.search(
                 r"kv_bytes\s+slot=(\d+)\s+paged=(\d+)\s+\(([\d.]+)x", derived)
@@ -162,14 +177,19 @@ def render_markdown(entries: list[dict]) -> str:
         "| run | decode tok/s | packed weight HBM B | vs int8 | "
         "fused σ ratio | fused noisy µs | serve tok/s | attn-kernel tok/s | "
         "paged KV B @25% | vs slot | score B (kernel) | vs exact | "
-        "tuned speedup |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "tuned speedup | prefix lanes | prefill tok saved |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
     ]
     for e in entries:
         m = e.get("metrics", {})
+        prefix_lanes = None
+        if m.get("prefix_lanes") is not None:
+            prefix_lanes = (f"{m['prefix_lanes']} vs "
+                            f"{m.get('prefix_lanes_base', '?')} "
+                            f"({m.get('prefix_win', 0):.1f}×)")
         lines.append(
             "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} "
-            "| {} |"
+            "| {} | {} | {} |"
             .format(
                 str(e.get("label", "?"))[:24],
                 _fmt(m.get("decode_tok_s"), "{:.0f}"),
@@ -184,6 +204,8 @@ def render_markdown(entries: list[dict]) -> str:
                 _fmt(m.get("score_bytes_kernel"), "{:d}"),
                 _fmt(m.get("score_win"), "{:.0f}×"),
                 _fmt(m.get("tune_speedup"), "{:.2f}×"),
+                prefix_lanes or "—",
+                _fmt(m.get("prefix_tok_saved"), "{:d}"),
             ))
     shapes = {e.get("metrics", {}).get("decode_shape") for e in entries}
     shapes.discard(None)

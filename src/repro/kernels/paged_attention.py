@@ -454,6 +454,14 @@ def fused_paged_write(k_pool, v_pool, new_k, new_v, flat_idx, *,
     write targets as built by transformer.paged_step — 0 marks an invalid
     lane (paged_write would park it in the trash block; here it is a
     no-op, the only deliberate divergence). Returns the updated pools.
+
+    Prefix-sharing contract (PR 7): flat_idx is derived from the block
+    table the HOST passes into the step, and the scheduler copy-on-write
+    forks any shared block before stepping (runtime.server._write_plan →
+    transformer.cow_copy_block), so by the time this epilogue runs the
+    remapped table already points every write at a privately held block —
+    the kernel never needs to know about refcounts, and must never be
+    handed a table whose write-span blocks are still shared.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"

@@ -18,6 +18,12 @@
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --paged --attn kernel --tune-cache tune_cache.json
 
+  # prefix-sharing pool (default on for --paged): repeated prompts map onto
+  # cached trie blocks; --n-samples forks N continuations copy-on-write off
+  # one shared prefill; --watermark tunes the admission headroom
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --paged --n-samples 4 [--no-prefix-sharing] [--watermark 0.1]
+
   REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host [--paged]
       # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
@@ -45,7 +51,7 @@ from repro.configs.registry import ARCHS, SMOKES
 from repro.core.cim_matmul import CIMConfig
 from repro.models import registry
 from repro.parallel import sharding
-from repro.runtime.server import Request, Server
+from repro.runtime.server import Request, Server, ServingConfig
 
 
 def main():
@@ -79,6 +85,18 @@ def main():
     ap.add_argument("--token-budget", type=int, default=None,
                     help="max new tokens per step across all lanes "
                          "(default: slots + prefill chunk)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the prefix trie (paged engine): every "
+                         "request prefills its full prompt even when an "
+                         "identical token prefix is already cached")
+    ap.add_argument("--watermark", type=float, default=None,
+                    help="free-block headroom fraction the paged admission "
+                         "keeps in reserve (default 1/16; 0 disables — "
+                         "admission then leans entirely on preemption)")
+    ap.add_argument("--n-samples", type=int, default=1,
+                    help="parallel samples per request (paged engine): one "
+                         "shared prefill, N continuations forked "
+                         "copy-on-write off the cached prefix")
     ap.add_argument("--attn", choices=("auto", "exact", "kernel"),
                     default="auto",
                     help="paged attention backend (kernels.paged_attention "
@@ -156,12 +174,8 @@ def main():
         print(f"calibrated static act_scale={act_scale:.6f} "
               f"(max span {cal['span']:.4f} over {len(cal['spans'])} "
               f"matmul sites)")
-    server = Server(params, cfg, n_slots=args.slots, max_len=args.max_len,
-                    prequant=args.cim == "bp-prequant", paged=args.paged,
-                    block_size=args.block_size, num_blocks=args.num_blocks,
-                    prefill_chunk=args.prefill_chunk,
-                    token_budget=args.token_budget, attn=args.attn,
-                    act_scale=act_scale)
+    serving = ServingConfig.from_flags(args, act_scale=act_scale)
+    server = Server(params, cfg, serving)
 
     rng = np.random.RandomState(0)
     reqs = []
@@ -170,21 +184,23 @@ def main():
         for i in range(args.requests):
             plen = int(rng.randint(4, 17))
             prompt = rng.randint(0, cfg.vocab, size=plen).tolist()
-            r = Request(prompt=prompt, max_new_tokens=args.max_new)
+            r = Request(prompt=prompt, max_new_tokens=args.max_new,
+                        n_samples=args.n_samples)
             server.submit(r)
             reqs.append(r)
         server.run_until_drained()
     dt = time.monotonic() - t0
-    total_new = sum(len(r.output) for r in reqs)
-    for r in reqs:
+    done = [s for r in reqs for s in (r, *r.samples)]
+    total_new = sum(len(r.output) for r in done)
+    for r in done:
         print(f"req{r.rid}: prompt_len={len(r.prompt)} -> {r.output}")
-    print(f"{args.requests} requests, {total_new} tokens, "
+    print(f"{args.requests} requests x{args.n_samples}, {total_new} tokens, "
           f"{server.steps_run} decode steps, {dt:.2f}s "
           f"({total_new / max(dt, 1e-9):.1f} tok/s)")
     m = server.metrics.summary()
     kv = server.kv_cache_bytes()
-    ttft = [r.ttft_s for r in reqs]
-    lat = [r.latency_s for r in reqs]
+    ttft = [r.ttft_s for r in done]
+    lat = [r.latency_s for r in done]
     print(f"engine={'paged' if args.paged else 'slots'} "
           f"attn={args.attn if args.paged else '-'} "
           f"decode={m['decode_tok_s']:.1f} tok/s "
@@ -196,7 +212,12 @@ def main():
     if args.paged:
         st = server.alloc.stats
         print(f"blocks: pool={st.num_blocks} peak={st.peak_in_use} "
-              f"allocs={st.total_allocs} frees={st.total_frees}")
+              f"shared={st.shared} allocs={st.total_allocs} "
+              f"frees={st.total_frees}")
+        print(f"sharing: prefix_hit_tokens={m['prefix_hit_tokens']} "
+              f"cow_forks={m['cow_forks']} "
+              f"preemptions={m['preemptions']} "
+              f"peak_active={m['peak_active']}")
 
 
 if __name__ == "__main__":

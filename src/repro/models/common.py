@@ -583,7 +583,17 @@ def embed_init(key, cfg: ModelConfig) -> Params:
 
 
 def embed_lookup(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
-    x = p["embed"][tokens]
+    # The stored table is [V/"tp", D/"fsdp"] (PARAM_RULES): gathering from an
+    # operand sharded on the collapsed slice dim, into an output that must
+    # land batch-sharded, makes the SPMD partitioner fall back to involuntary
+    # full rematerialization. Reshard first into a gather-friendly layout:
+    # batch-shard the token ids and move the table's model split onto the
+    # offset dim ([V, D/"tp"] — "tp" is disjoint from the batch axes, and
+    # offset-dim sharding passes straight through a gather). Each device then
+    # gathers only its own batch rows, and the output reshards to res_axes
+    # with one small activation all-gather instead of a table remat.
+    table = constrain(p["embed"], None, "tp")
+    x = table[constrain(tokens, "batch", None)]
     return constrain(x, *res_axes(cfg))
 
 

@@ -448,6 +448,20 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int,
     return cache
 
 
+def cow_copy_block(cache: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """Copy one physical block's K/V (every layer) from `src` to `dst`.
+
+    The copy-on-write primitive behind prefix sharing (runtime.server):
+    before a lane writes into a block another holder also maps, the
+    scheduler acquires a private block and duplicates the shared contents
+    here, then remaps the lane's table. src/dst are traced int32 scalars
+    so every fork shares one compilation; the server jits this with the
+    cache donated, making it an in-place device copy. Pools are
+    [L, NB, bs, KH, dh], so the block axis is axis 1 on every leaf.
+    """
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), cache)
+
+
 def _layer_paged(lp: dict, h: jax.Array, layer_pool: dict, cfg: ModelConfig,
                  *, positions, flat_idx, tables, kv_len):
     a, new_pool = common.paged_attention_apply(

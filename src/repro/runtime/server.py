@@ -1,20 +1,63 @@
-"""Continuous-batching serving loop: paged KV cache + chunked prefill.
+"""Continuous-batching serving loop: prefix-shared paged KV cache, chunked
+prefill, watermark admission with preemption.
+
+Construction goes through ONE config object::
+
+    from repro.runtime.server import Request, Server, ServingConfig
+    server = Server(params, cfg, ServingConfig(paged=True, n_slots=8,
+                                               max_len=256, block_size=16))
+
+`ServingConfig` consolidates what used to be an 11-keyword constructor
+sprawl; validation lives in its `__post_init__`, and `from_flags(args)`
+builds one from an argparse namespace (launch.serve). Legacy keyword
+construction (`Server(params, cfg, n_slots=..., ...)`) still works for one
+release behind a DeprecationWarning.
 
 Two engines share one Server front end (submit / step / run_until_drained):
 
-* **paged** (`paged=True`, the production path): a physical pool of
-  fixed-size KV blocks shared by all slots, a free-list `BlockAllocator`
-  with conservative admission reservations (runtime.paging), and per-slot
-  block tables threaded through the model's attention reads/writes
+* **paged** (`ServingConfig(paged=True)`, the production path): a physical
+  pool of fixed-size KV blocks shared by all slots, a REFCOUNTED
+  `BlockAllocator` + `PrefixTrie` (runtime.paging), and per-slot block
+  tables threaded through the model's attention reads/writes
   (models.transformer.paged_step). Resident KV bytes scale with the tokens
   actually cached, not n_slots × max_len. Prefill is CHUNKED through the
   same jit'd step as decode — decode is just the C=1 compilation of the
-  unified step, and a mixed batch advances decode lanes (valid=1) inside a
-  prefill-chunk-wide call — so there are no per-prompt-bucket prefill jits
-  and no host-side cache splicing. A token-budget scheduler caps the new
-  tokens per step (decode lanes first — latency — then prompt chunks up to
-  the remaining budget). Per-request latency (TTFT, total) and server
-  throughput metrics are recorded as requests flow.
+  unified step — and a token-budget scheduler caps new tokens per step
+  (decode lanes first, then prompt chunks).
+
+  PR-7 semantics on top of that engine:
+
+  - **prefix sharing**: at admission the request's prompt is matched
+    against the trie of previously cached full-block prefixes; the shared
+    span maps the SAME physical blocks (zero prefill compute, zero new
+    HBM), and only the tail is prefilled. Completed prefills register
+    their full prompt blocks back into the trie. K/V content is a pure
+    function of the absolute-position token prefix, so on the exact
+    attention backend shared-block reuse is bit-identical to recompute.
+  - **copy-on-write**: a lane about to write into a block some other
+    holder also maps (refcount > 1 — a fork sibling's tail, a pending
+    fork stash) first forks it: acquire a private block, device-copy the
+    contents (models.transformer.cow_copy_block), remap the table. The
+    step's fused write epilogue (kernels.paged_attention.fused_paged_write)
+    computes its scatter targets from the REMAPPED table, so it lands in
+    the private copy by construction.
+  - **watermark admission + preemption**: instead of reserving a
+    request's worst-case block count up front, admission only requires
+    the prompt's unshared span plus a small watermark of headroom
+    (`ServingConfig.watermark`, a fraction of the pool). When decode
+    growth outruns the pool mid-flight, the scheduler first evicts
+    least-recently-used trie entries, then PREEMPTS the newest-admitted
+    lane: its full blocks are registered into the trie, its refs
+    released, and the request re-queued at the head with an effective
+    prompt of prompt + generated-so-far — resume re-admits through the
+    trie, so only the sub-block tail recomputes. Greedy decode is
+    deterministic, so a preempted request's final token stream is
+    bit-identical to an unpreempted run (pinned by the preemption soak).
+  - **parallel sampling**: `Request(n_samples=N)` decodes N greedy
+    continuations off ONE prefill — clones share every prompt block and
+    CoW-fork the partial tail on their first write. Clone requests are
+    created at submit (`req.samples`) and installed, prefill-free, when
+    the parent's prefill completes.
 
 * **slot-based** (`paged=False`, the legacy engine, kept as the
   equivalence baseline): a monolithic [n_slots, max_len] cache; requests
@@ -27,42 +70,36 @@ Two engines share one Server front end (submit / step / run_until_drained):
   equivalence with this path is exact only on depth-aligned schedules —
   see tests/test_server_paged.py.
 
-Greedy sampling; EOS/max-token retirement frees slots (and, for the paged
-engine, their blocks — LIFO reuse, so stale block contents are exercised
-constantly) for queued requests. One deliberate semantic divergence: the
-legacy engine applies neither the max_new_tokens nor the eos_id check to
-the token emitted at prefill time (a max_new_tokens=1 request overshoots
-to 2 tokens there; an EOS first token keeps decoding); the paged engine
-checks both and retires immediately, matching one-request-at-a-time
-decode. Unservable requests (prompt ≥ max_len, or a
-worst-case block reservation larger than the whole pool) are rejected at
-submit() so they can never poison the queue.
+Greedy sampling; EOS/max-token retirement releases slots and block refs.
+One deliberate semantic divergence: the legacy engine applies neither the
+max_new_tokens nor the eos_id check to the token emitted at prefill time;
+the paged engine checks both and retires immediately, matching
+one-request-at-a-time decode. Unservable requests (prompt ≥ max_len, or a
+worst-case footprint larger than the whole pool) are rejected at submit()
+so they can never poison the queue.
 
-Attention backends (paged engine): `Server(attn=...)` selects the paged
-step's attention path from the kernels.paged_attention registry — "exact"
-(the PR-4 gather + one-pass softmax, the bit-identity anchor), "kernel"
-(the Pallas flash kernel: block gather inside the kernel, online softmax in
-VMEM, no [B, C, KH, G, W] score tensor), or "auto" (kernel, unless
-REPRO_FORCE_JNP=1 pins exact). The kernel path agrees with exact within
-float tolerance, so greedy tokens match except on near-tie logits; the
-bit-identity soak contracts below are pinned against attn="exact".
+Attention backends (paged engine): `ServingConfig(attn=...)` selects the
+paged step's attention path from the kernels.paged_attention registry —
+"exact" (gather + one-pass softmax, the bit-identity anchor), "kernel"
+(the Pallas flash kernel), or "auto" (kernel, unless REPRO_FORCE_JNP=1
+pins exact). The bit-identity contracts (including preemption-resume and
+prefix-shared admission) are pinned against attn="exact"; the kernel
+backend agrees within float tolerance and has token-equality soaks of its
+own.
 
-The bit-identity contracts above hold for FLOAT models (and for any fixed
-schedule). Under `cim.enabled` the engine's dynamic per-tensor act_scale
-(core.quant.act_scale — a global max over the batched activation tensor)
-couples every lane's quantization grid to the whole batch's content, so
-CIM-mode outputs depend on batch COMPOSITION — a pre-existing property of
-the seed slot engine that the paged engine inherits identically (both
-engines agree under the same schedule; different token budgets can differ
-on near-tie logits). The production fix is `Server(act_scale=...)`: a
-static calibrated scale (analysis.calibrate) pins one fixed input-DAC grid
-(zero point 0) for every lane, making a request's tokens invariant to
-batch composition — pinned by tests/test_calibrate.py.
+The bit-identity contracts hold for FLOAT models (and any fixed schedule).
+Under `cim.enabled` the engine's dynamic per-tensor act_scale couples every
+lane's quantization grid to the whole batch's content, so CIM-mode outputs
+depend on batch COMPOSITION — prefix sharing and preemption inherit that
+caveat identically. The production fix is `ServingConfig(act_scale=...)`:
+a static calibrated scale (analysis.calibrate) pins one fixed input-DAC
+grid for every lane — pinned by tests/test_calibrate.py.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional
 
 import jax
@@ -71,7 +108,86 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import registry
-from repro.runtime.paging import BlockAllocator, SlotTables
+from repro.runtime.paging import BlockAllocator, PrefixTrie, SlotTables
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingConfig:
+    """Everything the Server needs beyond (params, model cfg).
+
+    Engine selection + capacity: `paged` picks the block-pool engine;
+    `block_size` tokens per KV block; `num_blocks` usable blocks in the
+    pool (default: slot-cache parity, n_slots × max_len / block_size —
+    size it smaller to realize the paged memory win). Scheduling:
+    `prefill_chunk` prompt tokens per chunk through the unified step;
+    `token_budget` max new tokens per step across all lanes (default:
+    n_slots + prefill_chunk). Sharing/preemption (paged only):
+    `prefix_sharing` enables the trie + CoW machinery; `watermark` is the
+    pool fraction admission keeps free as decode headroom (trading
+    admission eagerness against preemption churn; 0 admits up to the last
+    block). Weights: `prequant` re-encodes CIM-routed weights as stored
+    codes (models.quantize), nibble-packed when `packed`. `attn` picks the
+    paged attention backend; `act_scale` pins a static calibrated
+    activation scale (analysis.calibrate) — needs cfg.cim.enabled.
+    """
+    n_slots: int = 4
+    max_len: int = 128
+    prequant: bool = False
+    packed: bool = True
+    paged: bool = False
+    block_size: int = 16
+    num_blocks: Optional[int] = None
+    prefill_chunk: int = 16
+    token_budget: Optional[int] = None
+    attn: str = "auto"
+    act_scale: Optional[float] = None
+    prefix_sharing: bool = True
+    watermark: float = 1 / 16
+
+    def __post_init__(self):
+        if self.n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        if self.max_len < 2:
+            raise ValueError("max_len must be >= 2")
+        if self.prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        if self.token_budget is not None and self.token_budget < 1:
+            raise ValueError("token_budget must be >= 1 (a 0 budget "
+                             "would step forever without progress)")
+        if self.paged:
+            if self.block_size < 1:
+                raise ValueError("block_size must be >= 1")
+            if self.max_len % self.block_size:
+                raise ValueError("max_len must be a multiple of block_size")
+            if self.num_blocks is not None and self.num_blocks < 1:
+                raise ValueError("num_blocks must be >= 1")
+        if not 0.0 <= self.watermark < 1.0:
+            raise ValueError("watermark is a pool fraction in [0, 1)")
+        from repro.kernels.paged_attention import choose_attn_backend
+        choose_attn_backend(self.attn)   # validate the name up front
+
+    @classmethod
+    def from_flags(cls, args, **overrides) -> "ServingConfig":
+        """Build from an argparse namespace (launch.serve's flag names);
+        missing attributes keep their defaults, `overrides` win last (the
+        launcher passes the calibrated act_scale value this way)."""
+        kw = {}
+        pairs = [("n_slots", "slots"), ("max_len", "max_len"),
+                 ("paged", "paged"), ("block_size", "block_size"),
+                 ("num_blocks", "num_blocks"),
+                 ("prefill_chunk", "prefill_chunk"),
+                 ("token_budget", "token_budget"), ("attn", "attn"),
+                 ("watermark", "watermark")]
+        for field, flag in pairs:
+            v = getattr(args, flag, None)
+            if v is not None:
+                kw[field] = v
+        if getattr(args, "no_prefix_sharing", False):
+            kw["prefix_sharing"] = False
+        if getattr(args, "cim", None) == "bp-prequant":
+            kw["prequant"] = True
+        kw.update(overrides)
+        return cls(**kw)
 
 
 @dataclasses.dataclass
@@ -79,10 +195,12 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    n_samples: int = 1       # paged engine: greedy continuations off one prefill
     # filled by the server:
     rid: int = -1
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    samples: list["Request"] = dataclasses.field(default_factory=list)
     # per-request latency metrics (monotonic timestamps)
     t_submit: float = 0.0
     t_first: float = 0.0     # first token emitted (prefill complete)
@@ -101,9 +219,17 @@ class Request:
 class ServerMetrics:
     steps: int = 0
     decode_tokens: int = 0    # tokens emitted by decode lanes
-    prefill_tokens: int = 0   # prompt tokens prefilled (either engine)
+    prefill_tokens: int = 0   # prompt tokens actually prefilled
     stalled_prefills: int = 0  # prefill lanes given 0 budget in a step
     stalled_decodes: int = 0   # decode lanes dropped by the token budget
+    preemptions: int = 0       # lanes evicted under pool pressure
+    prefix_hit_tokens: int = 0  # prefill tokens skipped via shared blocks
+    cow_forks: int = 0         # shared blocks privatized before a write
+    peak_active: int = 0       # max concurrently active lanes in a step
+    peak_decode_lanes: int = 0  # max lanes past prefill in one step — the
+    #                             pool-capacity-limited concurrency (admitted
+    #                             lanes can transiently exceed what the pool
+    #                             sustains; decode lanes cannot)
     wall_s: float = 0.0       # time inside step() + admission-time prefill
 
     def summary(self) -> dict:
@@ -115,118 +241,152 @@ class ServerMetrics:
                 "prefill_tok_s": self.prefill_tokens / w,
                 "stalled_prefills": self.stalled_prefills,
                 "stalled_decodes": self.stalled_decodes,
+                "preemptions": self.preemptions,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
+                "cow_forks": self.cow_forks,
+                "peak_active": self.peak_active,
+                "peak_decode_lanes": self.peak_decode_lanes,
                 "wall_s": self.wall_s}
 
 
+_LEGACY_KWARGS = tuple(f.name for f in dataclasses.fields(ServingConfig))
+
+
 class Server:
-    def __init__(self, params, cfg: ModelConfig, *, n_slots: int,
-                 max_len: int, prequant: bool = False, packed: bool = True,
-                 paged: bool = False, block_size: int = 16,
-                 num_blocks: int | None = None, prefill_chunk: int = 16,
-                 token_budget: int | None = None, attn: str = "auto",
-                 act_scale: float | None = None):
-        """prequant=True re-encodes CIM-routed weights as offline-quantized
-        stored codes before serving (models.quantize.quantize_params) —
-        nibble-packed uint8 when `packed` (4 bits/weight at rest, the
-        SRAM-faithful format), else int8 containers; composes with either
-        engine. paged=True selects the paged-KV engine (see module
-        docstring): `block_size` tokens per block, `num_blocks` usable
-        blocks in the pool (default: parity with the slot cache,
-        n_slots × max_len / block_size — size it smaller to realize the
-        paged memory win), `prefill_chunk` tokens per prompt chunk and
-        `token_budget` max new tokens per step (default: decode lanes +
-        one full prefill chunk). `attn` picks the paged attention backend
-        ("auto" | "exact" | "kernel" — see module docstring).
-        `act_scale` pins a static calibrated activation scale (the value
-        from analysis.calibrate.calibrate_act_scale) into the CIM
-        quantizer — requires cfg.cim.enabled."""
-        from repro.kernels.paged_attention import choose_attn_backend
-        choose_attn_backend(attn)   # validate the name up front
-        cfg = cfg.replace(attn_backend=attn)
-        if act_scale is not None:
+    def __init__(self, params, cfg: ModelConfig,
+                 serving: ServingConfig | None = None, **legacy):
+        if legacy:
+            if serving is not None:
+                raise TypeError("pass a ServingConfig OR legacy keyword "
+                                "arguments, not both")
+            unknown = set(legacy) - set(_LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"unknown Server kwargs: {sorted(unknown)}")
+            warnings.warn(
+                "Server(params, cfg, n_slots=..., ...) keyword construction "
+                "is deprecated; pass Server(params, cfg, ServingConfig(...))",
+                DeprecationWarning, stacklevel=2)
+            serving = ServingConfig(**legacy)
+        elif serving is None:
+            serving = ServingConfig()
+        self.serving = serving
+        cfg = cfg.replace(attn_backend=serving.attn)
+        if serving.act_scale is not None:
             assert cfg.cim.enabled, "static act_scale needs cim.enabled"
             cfg = cfg.replace(cim=dataclasses.replace(
                 cfg.cim, act=dataclasses.replace(
-                    cfg.cim.act, static_scale=float(act_scale))))
-        if prequant:
+                    cfg.cim.act, static_scale=float(serving.act_scale))))
+        if serving.prequant:
             assert cfg.cim.enabled, "prequant serving needs cim.enabled"
             from repro.models.quantize import quantize_params
-            params = quantize_params(params, cfg, packed=packed)
+            params = quantize_params(params, cfg, packed=serving.packed)
         self.params = params
         self.cfg = cfg
-        self.n_slots = n_slots
-        self.max_len = max_len
+        self.n_slots = serving.n_slots
+        self.max_len = serving.max_len
         self.mod = registry.get_module(cfg)
-        self.paged = paged
-        self.slot_req: list[Optional[Request]] = [None] * n_slots
+        self.paged = serving.paged
+        self.slot_req: list[Optional[Request]] = [None] * self.n_slots
         self.queue: list[Request] = []
         self._next_rid = 0
         self.steps_run = 0
         self.metrics = ServerMetrics()
 
-        if paged:
+        if self.paged:
             if not (hasattr(self.mod, "paged_step")
                     and self.mod.supports_paged(cfg)):
                 raise NotImplementedError(
                     f"paged serving not supported for arch {cfg.arch!r}")
-            if max_len % block_size:
-                raise ValueError("max_len must be a multiple of block_size")
-            self.block_size = block_size
-            max_blocks = max_len // block_size
+            self.block_size = serving.block_size
+            max_blocks = self.max_len // self.block_size
+            num_blocks = serving.num_blocks
             if num_blocks is None:
-                num_blocks = n_slots * max_blocks
+                num_blocks = self.n_slots * max_blocks
             self.alloc = BlockAllocator(num_blocks)
-            self.tables = SlotTables(n_slots, max_blocks, block_size)
-            if prefill_chunk < 1:
-                raise ValueError("prefill_chunk must be >= 1")
-            self.prefill_chunk = prefill_chunk
-            self.token_budget = token_budget if token_budget is not None \
-                else n_slots + prefill_chunk
-            if self.token_budget < 1:
-                raise ValueError("token_budget must be >= 1 (a 0 budget "
-                                 "would step forever without progress)")
+            self.tables = SlotTables(self.n_slots, max_blocks,
+                                     self.block_size)
+            self.trie = PrefixTrie(self.block_size) \
+                if serving.prefix_sharing else None
+            self.prefill_chunk = serving.prefill_chunk
+            self.token_budget = serving.token_budget \
+                if serving.token_budget is not None \
+                else self.n_slots + self.prefill_chunk
+            self._watermark = max(1, round(num_blocks * serving.watermark)) \
+                if serving.watermark > 0 else 0
             # pool holds num_blocks usable blocks + the trash block (id 0)
             self.cache = jax.jit(
                 lambda: self.mod.init_paged_cache(cfg, num_blocks + 1,
-                                                  block_size))()
+                                                  self.block_size))()
             self._pstep = jax.jit(
                 lambda p, t, c, tb, ln, vd:
                     self.mod.paged_step(p, t, c, tb, ln, vd, cfg))
-            self._reserved: dict[int, int] = {}   # slot → blocks reserved
-            self._pf_done = np.zeros(n_slots, np.int64)  # prompt tokens fed
+            # CoW block copy: one compilation (src/dst are traced scalars),
+            # donated pools so the fork is an in-place device copy
+            self._cow = jax.jit(
+                lambda c, src, dst: self.mod.cow_copy_block(c, src, dst),
+                donate_argnums=0)
+            self._pf_done = np.zeros(self.n_slots, np.int64)
+            self._pf_src: list[Optional[list[int]]] = [None] * self.n_slots
+            self._slot_seq = np.zeros(self.n_slots, np.int64)
+            self._adm_seq = 0
+            self._fork_children: dict[int, list[Request]] = {}
+            self._fork_ready: dict[int, dict] = {}
             self._rr = 0   # round-robin offset for budget-capped decode
         else:
-            self.slot_len = np.zeros(n_slots, np.int32)
+            self.slot_len = np.zeros(self.n_slots, np.int32)
             self.cache = jax.jit(
-                lambda: self.mod.init_cache(cfg, n_slots, max_len))()
+                lambda: self.mod.init_cache(cfg, self.n_slots,
+                                            self.max_len))()
             self._decode = jax.jit(
                 lambda p, t, c: self.mod.decode_step(p, t, c, cfg))
             self._prefill = jax.jit(
-                lambda p, b: self.mod.prefill(p, b, cfg, max_len=max_len),
+                lambda p, b: self.mod.prefill(p, b, cfg,
+                                              max_len=self.max_len),
                 static_argnames=())
 
     # -- request lifecycle ---------------------------------------------------
     def submit(self, req: Request) -> int:
         # reject unservable requests BEFORE queueing: a poison request at
-        # the queue head would otherwise either block admission forever
-        # (worst-case reservation larger than the whole pool —
-        # run_until_drained would spin) or crash mid-serve and strand the
-        # in-flight requests.
+        # the queue head would otherwise either stall admission forever
+        # (a footprint larger than the whole pool — run_until_drained
+        # would spin) or crash mid-serve and strand the in-flight
+        # requests.
         if not req.prompt:
             raise ValueError("empty prompt")
+        if req.n_samples < 1:
+            raise ValueError("n_samples must be >= 1")
         if self.paged:
             if len(req.prompt) >= self.max_len - 1:
                 raise ValueError(
                     f"prompt of {len(req.prompt)} tokens exceeds "
                     f"max_len={self.max_len}")
             need = self._blocks_worst_case(req)
+            if req.n_samples > 1:
+                # a sibling's CoW fork keeps the shared original alive in
+                # the stash while the private copy grows
+                need += 1
             if need > self.alloc.stats.num_blocks:
                 raise ValueError(
                     f"request needs {need} KV blocks worst-case but the "
                     f"pool only has {self.alloc.stats.num_blocks}")
+        elif req.n_samples > 1:
+            raise ValueError("parallel sampling (n_samples > 1) needs the "
+                             "paged engine")
         req.rid = self._next_rid
         req.t_submit = time.monotonic()
         self._next_rid += 1
+        if self.paged and req.n_samples > 1:
+            kids = []
+            for _ in range(req.n_samples - 1):
+                c = Request(prompt=list(req.prompt),
+                            max_new_tokens=req.max_new_tokens,
+                            eos_id=req.eos_id)
+                c.rid = self._next_rid
+                self._next_rid += 1
+                c.t_submit = req.t_submit
+                kids.append(c)
+            req.samples = list(kids)
+            self._fork_children[req.rid] = kids
         self.queue.append(req)
         # admission work (incl. the legacy engine's per-request prefill)
         # counts toward wall_s so both engines' tok/s share one clock
@@ -298,58 +458,172 @@ class Server:
 
     # -- paged engine ---------------------------------------------------------
     def _blocks_worst_case(self, req: Request) -> int:
-        """Conservative reservation: every token the request may ever cache
-        (prompt + generated, the final sampled token is never written)."""
+        """Every block the request may ever hold at once (prompt +
+        generated; the final sampled token is never written). Used only
+        for the submit-time can-this-EVER-fit rejection — admission itself
+        is watermark-based."""
         need = min(len(req.prompt) + req.max_new_tokens, self.max_len)
         return self.tables.blocks_for(need)
 
+    def _available(self) -> int:
+        """Blocks admission can count on: free now + trie-evictable."""
+        n = self.alloc.stats.free
+        if self.trie is not None:
+            n += self.trie.evictable(self.alloc)
+        return n
+
     def _admit_paged(self):
-        for slot in range(self.n_slots):
-            if self.slot_req[slot] is not None or not self.queue:
+        while self.queue:
+            try:
+                slot = self.slot_req.index(None)
+            except ValueError:
+                return
+            req = self.queue[0]
+            if req.rid in self._fork_ready:
+                # fork clones map already-referenced blocks: zero new HBM,
+                # no prefill, no watermark interaction
+                self.queue.pop(0)
+                self._install_fork(slot, req)
                 continue
-            req = self.queue[0]  # pre-validated by submit()
-            need = self._blocks_worst_case(req)
-            if not self.alloc.reserve(need):
-                return  # head-of-line blocks until the pool drains
+            # effective prompt: original prompt + anything generated before
+            # a preemption (resume is a prefill of the longer prompt; the
+            # trie turns most of it into a free match)
+            eff = req.prompt + req.output
+            matched = self.trie.match(eff[:-1]) if self.trie is not None \
+                else []
+            need = self.tables.blocks_for(len(eff)) - len(matched)
+            headroom = self._watermark if any(
+                r is not None for r in self.slot_req) else 0
+            if self._available() < need + headroom:
+                return  # head-of-line waits; active lanes keep draining
             self.queue.pop(0)
             self.slot_req[slot] = req
-            self._reserved[slot] = need
-            self._pf_done[slot] = 0
+            self._slot_seq[slot] = self._adm_seq
+            self._adm_seq += 1
+            if matched:
+                self.alloc.incref(matched)
+                self.tables.assign(slot, matched,
+                                   len(matched) * self.block_size)
+                self.metrics.prefix_hit_tokens += \
+                    len(matched) * self.block_size
+            self._pf_src[slot] = eff
+            self._pf_done[slot] = len(matched) * self.block_size
 
-    def _step_paged(self):
-        active = [s for s in range(self.n_slots) if self.slot_req[s]]
-        if not active:
-            return
+    def _install_fork(self, slot: int, req: Request):
+        info = self._fork_ready.pop(req.rid)
+        self.slot_req[slot] = req
+        self._slot_seq[slot] = self._adm_seq
+        self._adm_seq += 1
+        self.tables.assign(slot, info["blocks"], info["lens"])
+        self._pf_src[slot] = []          # nothing to prefill: pure decode
+        self._pf_done[slot] = 0
+        req.output = list(info["output"])
+        now = time.monotonic()
+        if not req.t_first:
+            req.t_first = now
+        self.metrics.prefix_hit_tokens += info["lens"]
+        if (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None
+                    and req.output[-1] == req.eos_id)):
+            self._retire_paged(slot, now)
+
+    def _schedule(self, active):
+        """Pick this step's lanes under the token budget: decode first
+        (latency-critical, 1 token each), then prompt chunks. Returns
+        (decode_lanes, dropped_decodes, takes, starved_prefills)."""
         prefilling = [s for s in active
-                      if self._pf_done[s] < len(self.slot_req[s].prompt)]
+                      if self._pf_done[s] < len(self._pf_src[s])]
         budget = self.token_budget
-        # decode lanes first (latency-critical, 1 token each). Under the
-        # current policy decode lanes can never exceed the budget — a lane
-        # only becomes decode by completing prefill, which itself needs
-        # budget, so #decode lanes ≤ token_budget is invariant (pinned by
-        # tests). The rotation + stall counter below are future-proofing
-        # for policies that break it (preemption, admission bursts): if
-        # lanes are ever dropped, no slot starves deterministically and
-        # the drops are visible in metrics.
         cands = [s for s in active if s not in prefilling]
         if cands:
             rot = self._rr % len(cands)
             cands = cands[rot:] + cands[:rot]
-        self._rr += 1
         decode_lanes = cands[:budget]
-        self.metrics.stalled_decodes += len(cands) - len(decode_lanes)
+        dropped = len(cands) - len(decode_lanes)
         budget -= len(decode_lanes)
-        # ... then prompt chunks from the remaining token budget
         takes: dict[int, int] = {}
+        starved = 0
         for s in prefilling:
-            req = self.slot_req[s]
-            take = min(len(req.prompt) - int(self._pf_done[s]),
+            take = min(len(self._pf_src[s]) - int(self._pf_done[s]),
                        self.prefill_chunk, budget)
             if take <= 0:
-                self.metrics.stalled_prefills += 1
+                starved += 1
                 continue
             takes[s] = take
             budget -= take
+        return decode_lanes, dropped, takes, starved
+
+    def _write_plan(self, valid_map: dict[int, int]):
+        """Blocks this step must acquire: table growth for new positions,
+        plus one private copy per shared block about to be written (CoW).
+        Returns (total_new_blocks, [(slot, logical_idx, shared_block)])."""
+        bs = self.block_size
+        need, copies = 0, []
+        for s, v in valid_map.items():
+            if not v:
+                continue
+            lens = int(self.tables.lens[s])
+            new_len = lens + v
+            need += max(0, self.tables.blocks_for(new_len)
+                        - int(self.tables.n_alloc[s]))
+            # writes land in logical blocks [lens//bs, (new_len-1)//bs];
+            # only already-held blocks can be shared (growth is private)
+            for j in range(lens // bs,
+                           min((new_len - 1) // bs + 1,
+                               int(self.tables.n_alloc[s]))):
+                b = int(self.tables.tables[s, j])
+                if self.alloc.refcount(b) > 1:
+                    copies.append((s, j, b))
+                    need += 1
+        return need, copies
+
+    def _step_paged(self):
+        if not any(r is not None for r in self.slot_req):
+            return
+        # plan the step; preempt the newest-admitted lane while the pool
+        # cannot back every write (evictable trie entries count as room —
+        # they are freed below, before acquiring)
+        while True:
+            active = [s for s in range(self.n_slots) if self.slot_req[s]]
+            if not active:
+                return
+            decode_lanes, dropped, takes, starved = self._schedule(active)
+            valid_map = {s: 1 for s in decode_lanes}
+            valid_map.update(takes)
+            need, copies = self._write_plan(valid_map)
+            if need <= self._available() or len(active) == 1:
+                break
+            # newest admission loses: FIFO fairness, and its trie overlap
+            # makes its resume the cheapest recompute
+            victim = max(active, key=lambda s: int(self._slot_seq[s]))
+            self._preempt(victim)
+        self._rr += 1
+        self.metrics.stalled_decodes += dropped
+        self.metrics.stalled_prefills += starved
+        self.metrics.peak_active = max(self.metrics.peak_active, len(active))
+        self.metrics.peak_decode_lanes = max(self.metrics.peak_decode_lanes,
+                                             len(decode_lanes))
+        # make room, then privatize shared write targets, then back the
+        # new positions. With one active lane the submit-time worst-case
+        # check guarantees this always fits (see _blocks_worst_case).
+        shortfall = need - self.alloc.stats.free
+        if shortfall > 0 and self.trie is not None:
+            self.trie.evict(shortfall, self.alloc)
+        if not self.alloc.can_acquire(need):
+            raise RuntimeError(
+                f"pool cannot back this step: need {need} blocks, "
+                f"free {self.alloc.stats.free} — scheduler invariant "
+                "violated")
+        for s, j, b in copies:
+            [nb] = self.alloc.acquire(1)
+            self.cache = self._cow(self.cache, jnp.asarray(b, jnp.int32),
+                                   jnp.asarray(nb, jnp.int32))
+            self.tables.replace(s, j, nb, self.alloc)
+            self.metrics.cow_forks += 1
+        for s, v in valid_map.items():
+            if v:
+                self.tables.grow(s, int(self.tables.lens[s]) + v,
+                                 self.alloc)
         # steps whose prefill lanes are all budget-starved run the cheap
         # C=1 decode compilation, not a chunk-wide call for 1-token lanes
         c = self.prefill_chunk if takes else 1
@@ -360,13 +634,9 @@ class Server:
             valid[s] = 1
         for s, take in takes.items():
             done = int(self._pf_done[s])
-            toks[s, :take] = self.slot_req[s].prompt[done:done + take]
+            src = self._pf_src[s]
+            toks[s, :take] = src[done:done + take]
             valid[s] = take
-        # back every position this step writes (reserved ⇒ cannot fail)
-        for s in active:
-            if valid[s]:
-                self.tables.grow(s, int(self.tables.lens[s]) + int(valid[s]),
-                                 self.alloc)
         logits, self.cache = self._pstep(
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(self.tables.tables), jnp.asarray(self.tables.lens),
@@ -378,12 +648,15 @@ class Server:
                 continue
             req = self.slot_req[s]
             self.tables.lens[s] += int(valid[s])
-            if s in prefilling:
+            if s in takes:
                 self._pf_done[s] += int(valid[s])
                 self.metrics.prefill_tokens += int(valid[s])
-                if self._pf_done[s] == len(req.prompt):
-                    req.output.append(int(nxt[s]))   # first generated token
-                    req.t_first = now
+                if self._pf_done[s] == len(self._pf_src[s]):
+                    req.output.append(int(nxt[s]))  # first generated token
+                    if not req.t_first:
+                        req.t_first = now
+                    self._register_prefix(s)
+                    self._stash_forks(s)
                     # one-at-a-time semantics: exhaustion AND EOS apply to
                     # the prefill-emitted token too (the legacy engine
                     # checks neither here — see the module docstring)
@@ -403,27 +676,90 @@ class Server:
         self.metrics.steps += 1
         self._admit()
 
+    def _register_prefix(self, slot: int):
+        """Cache the completed prefill's full prompt blocks in the trie so
+        later requests (and this one, if preempted) map them for free."""
+        if self.trie is None:
+            return
+        src = self._pf_src[slot]
+        nfull = len(src) // self.block_size
+        if nfull:
+            self.trie.insert(src[:nfull * self.block_size],
+                             self.tables.held(slot)[:nfull], self.alloc)
+
+    def _stash_forks(self, slot: int):
+        """Parent prefill just completed: reference its whole block chain
+        once per clone and queue the clones (front — they need zero new
+        blocks, so they never block on the watermark)."""
+        req = self.slot_req[slot]
+        kids = self._fork_children.pop(req.rid, None)
+        if not kids:
+            return
+        held = self.tables.held(slot)
+        for c_req in reversed(kids):
+            self.alloc.incref(held)
+            self._fork_ready[c_req.rid] = {
+                "blocks": list(held),
+                "lens": int(self.tables.lens[slot]),
+                "output": list(req.output)}
+            self.queue.insert(0, c_req)
+
+    def _preempt(self, slot: int):
+        """Evict a running lane under pool pressure: register its full
+        blocks in the trie (so resume re-maps instead of recomputing),
+        release its refs, and re-queue it at the head with prompt +
+        generated-so-far as the effective prompt. Greedy decode makes the
+        resumed stream bit-identical to the unpreempted one."""
+        req = self.slot_req[slot]
+        lens = int(self.tables.lens[slot])
+        if self.trie is not None and lens >= self.block_size:
+            nfull = lens // self.block_size
+            stream = (req.prompt + req.output)[:nfull * self.block_size]
+            self.trie.insert(stream, self.tables.held(slot)[:nfull],
+                             self.alloc)
+        self.tables.release(slot, self.alloc)
+        self.slot_req[slot] = None
+        self._pf_src[slot] = None
+        self._pf_done[slot] = 0
+        self.queue.insert(0, req)
+        self.metrics.preemptions += 1
+
     def _retire_paged(self, slot: int, now: float):
         req = self.slot_req[slot]
         req.done = True
         req.t_done = now
-        leftover = self._reserved.pop(slot) - int(self.tables.n_alloc[slot])
-        if leftover > 0:
-            self.alloc.unreserve(leftover)
         self.tables.release(slot, self.alloc)
         self.slot_req[slot] = None
+        self._pf_src[slot] = None
+        self._pf_done[slot] = 0
 
     def run_until_drained(self, max_steps: int = 10_000):
         while any(self.slot_req) or self.queue:
+            before = self.steps_run
             self.step()
+            if self.steps_run == before:
+                # nothing was active; only admission can make progress
+                self._admit()
+                if not any(self.slot_req):
+                    raise RuntimeError(
+                        "admission stalled with an empty batch — the head "
+                        "request cannot fit (submit-time checks should "
+                        "have rejected it)")
             if self.steps_run > max_steps:
                 raise RuntimeError("serving loop did not drain")
 
     # -- capacity / reporting -------------------------------------------------
+    def flush_prefix_cache(self) -> int:
+        """Drop every trie entry; blocks still mapped by a live slot just
+        lose their cache ref. Returns blocks freed to the pool."""
+        if self.paged and self.trie is not None:
+            return self.trie.flush(self.alloc)
+        return 0
+
     def kv_cache_bytes(self) -> dict:
         """Resident KV bytes: {"total": pool/cache footprint, "in_use":
-        bytes of blocks actually allocated (== total for the slot cache —
-        the number the paged engine exists to shrink)}."""
+        bytes of blocks currently referenced — live request blocks plus
+        trie-cached (evictable) prefixes; == total for the slot cache}."""
         leaves = jax.tree_util.tree_leaves(self.cache)
         total = int(sum(a.nbytes for a in leaves
                         if hasattr(a, "nbytes") and a.ndim > 0))

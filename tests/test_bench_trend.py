@@ -46,6 +46,12 @@ def _doc(us_decode=400.0, ratio=1.02):
                         "kblocks=1|row_tile=None"},
             {"name": "cim_mvm_m64_g2_n64_tuned", "us": 206.0,
              "derived": "default_us=285.0|speedup=1.38x|bm=128|bn=64"},
+            # schema-v5 shared-prefix serving row: decode-lane concurrency
+            # of the prefix-sharing pool vs the sharing-disabled pool
+            {"name": "serve_shared_prefix_s8_r7", "us": 6000.0,
+             "derived": "peak_lanes shared=7 nosharing=1 (7.0x)|"
+                        "prefill_tok_saved=336|"
+                        "preempt shared=0 nosharing=21"},
         ],
     }
 
@@ -75,6 +81,11 @@ def test_extract_metrics():
     # w4096 tuned/default names don't disturb the score-window probe above
     assert m["tune_window"] == 4096
     assert m["tune_speedup"] == pytest.approx(6.07)
+    # schema-v5 shared-prefix serving row
+    assert m["prefix_lanes"] == 7
+    assert m["prefix_lanes_base"] == 1
+    assert m["prefix_win"] == pytest.approx(7.0)
+    assert m["prefix_tok_saved"] == 336
 
 
 def test_extract_metrics_tolerates_missing_rows():
@@ -110,9 +121,10 @@ def test_history_append_and_render(tmp_path):
     assert "2.00×" in md and "36864" in md
     assert "9.5" in md and "128×" in md    # v3 attn-kernel + score probe
     assert "6.07×" in md                   # v4 tuned-vs-default speedup
-    # table stays well-formed: every data row has the 13 columns
+    assert "7 vs 1 (7.0×)" in md and "336" in md  # v5 shared-prefix row
+    # table stays well-formed: every data row has the 15 columns
     rows = [ln for ln in md.splitlines() if ln.startswith("| run-")]
-    assert all(ln.count("|") == 14 for ln in rows)
+    assert all(ln.count("|") == 16 for ln in rows)
 
 
 def test_one_shot_mode(tmp_path):

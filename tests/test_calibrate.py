@@ -13,7 +13,7 @@ from repro.core.cim_matmul import CIMConfig
 from repro.core.quant import ActQuantConfig, act_scale, quantize_act, \
     record_act_spans
 from repro.models import registry
-from repro.runtime.server import Request, Server
+from repro.runtime.server import Request, Server, ServingConfig
 
 MAX_LEN = 64
 
@@ -99,9 +99,9 @@ def test_static_scale_decouples_lane_from_batch(cim_setup):
     companions = [[11, 3, 8], [1, 2, 3, 4, 5, 6]]
 
     def probe_tokens(with_companions: bool):
-        server = Server(params, cfg, n_slots=3, max_len=MAX_LEN,
-                        paged=True, block_size=8, prefill_chunk=4,
-                        attn="exact", act_scale=scale)
+        server = Server(params, cfg, ServingConfig(
+            n_slots=3, max_len=MAX_LEN, paged=True, block_size=8,
+            prefill_chunk=4, attn="exact", act_scale=scale))
         req = Request(prompt=list(probe), max_new_tokens=4)
         server.submit(req)
         if with_companions:
@@ -117,5 +117,5 @@ def test_server_act_scale_requires_cim(cim_setup):
     cfg, params = cim_setup
     float_cfg = cfg.replace(cim=CIMConfig(enabled=False))
     with pytest.raises(AssertionError):
-        Server(params, float_cfg, n_slots=1, max_len=MAX_LEN,
-               act_scale=0.1)
+        Server(params, float_cfg,
+               ServingConfig(n_slots=1, max_len=MAX_LEN, act_scale=0.1))

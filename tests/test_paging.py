@@ -1,0 +1,244 @@
+"""runtime.paging invariants: the refcounted block allocator, the prefix
+trie, and the slot tables' copy-on-write remapping.
+
+Property-based (hypothesis; the stub in containers without it): a random
+op stream drives the allocator against a pure-python refcount model, trie
+insert/match must round-trip arbitrary token chains, and eviction must
+never free a block a live holder still maps. These are the invariants the
+serving engine's prefix sharing leans on — a leak or a premature free here
+is silent KV corruption there.
+"""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.runtime.paging import (TRASH_BLOCK, BlockAllocator, PrefixTrie,
+                                  SlotTables)
+
+POOL = 8
+
+
+# ---------------------------------------------------------------------------
+# allocator: refcounts vs a pure-python model
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=10_000),
+                min_size=1, max_size=60))
+def test_allocator_matches_refcount_model(ops):
+    """Random acquire/incref/decref stream: stats and per-block refcounts
+    track a dict model exactly, blocks free iff their count hits 0, and a
+    full drain restores the empty pool with allocs == frees."""
+    alloc = BlockAllocator(POOL)
+    model: dict[int, int] = {}
+    for op in ops:
+        kind = op % 3
+        if kind == 0:
+            n = 1 + (op // 3) % 2
+            if alloc.can_acquire(n):
+                ids = alloc.acquire(n)
+                assert len(set(ids)) == n and TRASH_BLOCK not in ids
+                for b in ids:
+                    assert b not in model, "re-issued a live block"
+                    model[b] = 1
+        elif model:
+            b = sorted(model)[(op // 3) % len(model)]
+            if kind == 1:
+                alloc.incref([b])
+                model[b] += 1
+            else:
+                freed = alloc.decref([b])
+                model[b] -= 1
+                if model[b] == 0:
+                    assert freed == [b]
+                    del model[b]
+                else:
+                    assert freed == []
+        stt = alloc.stats
+        assert stt.in_use == len(model)
+        assert stt.free == POOL - len(model)
+        assert stt.shared == sum(1 for v in model.values() if v >= 2)
+        assert stt.private == stt.in_use - stt.shared
+        assert all(alloc.refcount(b) == v for b, v in model.items())
+    for b, v in list(model.items()):
+        alloc.decref([b] * v)
+    assert alloc.stats.in_use == 0 and alloc.stats.free == POOL
+    assert alloc.stats.total_frees == alloc.stats.total_allocs
+
+
+def test_allocator_exhaustion_and_bad_sizes():
+    alloc = BlockAllocator(2)
+    alloc.acquire(2)
+    assert not alloc.can_acquire(1)
+    with pytest.raises(RuntimeError):
+        alloc.acquire(1)
+    with pytest.raises(ValueError):
+        BlockAllocator(0)
+
+
+def test_freed_blocks_are_reissued_lifo():
+    """LIFO free list: the most recently freed block comes back first —
+    the adversarial order for stale-contents bugs, pinned so soaks keep
+    exercising it."""
+    alloc = BlockAllocator(4)
+    a, b = alloc.acquire(2)
+    alloc.decref([a])
+    alloc.decref([b])
+    assert alloc.acquire(2) == [b, a]
+
+
+# ---------------------------------------------------------------------------
+# prefix trie: insert/match round-trip, refcount ownership, eviction
+# ---------------------------------------------------------------------------
+BS = 4
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=5),
+                min_size=0, max_size=40),
+       st.integers(min_value=0, max_value=40))
+def test_trie_insert_match_roundtrip(tokens, cut):
+    """insert() then match() returns exactly the inserted chain; a partial
+    tail (< block_size tokens) never matches; shorter prefixes match their
+    block-aligned prefix; the trie holds one ref per cached block so the
+    chain survives the inserting request, and flush() releases it all."""
+    alloc = BlockAllocator(16)
+    trie = PrefixTrie(BS)
+    nfull = len(tokens) // BS
+    full = tokens[:nfull * BS]
+    blocks = alloc.acquire(nfull)
+    assert trie.insert(full, blocks, alloc) == nfull
+    assert trie.match(list(tokens)) == blocks     # tail tokens ignored
+    k = cut % (nfull + 1) if nfull else 0
+    assert trie.match(full[:k * BS]) == blocks[:k]
+    # a diverging token truncates the match at that chunk boundary
+    if nfull:
+        div = list(full)
+        div[(nfull - 1) * BS] += 1
+        assert trie.match(div) == blocks[:nfull - 1]
+    assert all(alloc.refcount(b) == 2 for b in blocks)
+    alloc.decref(blocks)                          # requester retires
+    assert alloc.stats.in_use == nfull            # cache keeps them alive
+    assert trie.evictable(alloc) == nfull
+    assert trie.flush(alloc) == nfull
+    assert alloc.stats.in_use == 0 and trie.cached_blocks == 0
+
+
+def test_trie_duplicate_insert_keeps_canonical_blocks():
+    """Re-inserting an already-cached chain registers nothing: the caller's
+    duplicate blocks stay caller-owned (refcount 1) and are freed by the
+    caller alone; the canonical chain keeps serving matches."""
+    alloc = BlockAllocator(16)
+    trie = PrefixTrie(BS)
+    toks = list(range(2 * BS))
+    first = alloc.acquire(2)
+    trie.insert(toks, first, alloc)
+    dup = alloc.acquire(2)
+    assert trie.insert(toks, dup, alloc) == 0
+    assert all(alloc.refcount(b) == 1 for b in dup)
+    assert trie.match(toks) == first
+    assert alloc.decref(dup) == dup
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=6),
+       st.integers(min_value=0, max_value=5))
+def test_trie_evict_never_frees_live_blocks(n, j):
+    """With an external holder on chain position j, evict() frees exactly
+    the unshared suffix behind it (leaf-first cannot reach past a live
+    block), and the freed blocks all had only the trie's ref."""
+    j = min(j, n - 1)
+    alloc = BlockAllocator(16)
+    trie = PrefixTrie(BS)
+    blocks = alloc.acquire(n)
+    trie.insert(list(range(n * BS)), blocks, alloc)
+    alloc.decref(blocks)          # requester gone; trie is sole holder
+    alloc.incref([blocks[j]])     # ... except a live slot maps block j
+    assert trie.evictable(alloc) == n - 1 - j
+    freed = trie.evict(n, alloc)
+    assert freed == n - 1 - j
+    assert alloc.refcount(blocks[j]) == 2       # untouched
+    assert all(trie.owns(b) for b in blocks[:j + 1])
+    assert all(not trie.owns(b) for b in blocks[j + 1:])
+    assert alloc.stats.in_use == j + 1
+
+
+def test_trie_evicts_lru_chain_first():
+    alloc = BlockAllocator(16)
+    trie = PrefixTrie(BS)
+    a = alloc.acquire(1)
+    b = alloc.acquire(1)
+    trie.insert([1] * BS, a, alloc)
+    trie.insert([2] * BS, b, alloc)
+    alloc.decref(a + b)
+    trie.match([1] * BS)          # refresh a: b becomes the LRU entry
+    assert trie.evict(1, alloc) == 1
+    assert trie.owns(a[0]) and not trie.owns(b[0])
+
+
+def test_trie_forget_block_drops_subtree_keeps_shared_alive():
+    alloc = BlockAllocator(16)
+    trie = PrefixTrie(BS)
+    blocks = alloc.acquire(3)
+    trie.insert(list(range(3 * BS)), blocks, alloc)
+    trie.forget_block(blocks[1], alloc)   # drops blocks[1] and [2]
+    assert trie.owns(blocks[0])
+    assert not trie.owns(blocks[1]) and not trie.owns(blocks[2])
+    # the requester's refs kept the forgotten blocks alive
+    assert all(alloc.refcount(b) == 1 for b in blocks[1:])
+    assert alloc.refcount(blocks[0]) == 2
+
+
+# ---------------------------------------------------------------------------
+# slot tables: growth accounting + copy-on-write remap
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=32),
+                min_size=1, max_size=8))
+def test_slot_tables_growth_accounting(lengths):
+    """grow() backs exactly ceil(len / bs) blocks at the high-water length;
+    release() frees everything the slot owned."""
+    alloc = BlockAllocator(16)
+    tab = SlotTables(1, 16, BS)
+    hi = 0
+    for ln in lengths:
+        hi = max(hi, ln)
+        tab.grow(0, hi, alloc)
+        assert int(tab.n_alloc[0]) == tab.blocks_for(hi)
+        assert alloc.stats.in_use == tab.blocks_for(hi)
+        held = tab.held(0)
+        assert len(set(held)) == len(held) and TRASH_BLOCK not in held
+    freed = tab.release(0, alloc)
+    assert len(freed) == tab.blocks_for(hi)
+    assert alloc.stats.in_use == 0
+
+
+def test_slot_tables_cow_replace():
+    """replace() remaps one logical block to a private copy: the slot
+    drops its ref on the shared original (the other holder keeps it) and
+    release() frees the private copy with the rest."""
+    alloc = BlockAllocator(8)
+    tab = SlotTables(1, 4, BS)
+    tab.grow(0, 3 * BS, alloc)
+    held = tab.held(0)
+    alloc.incref([held[1]])               # trie / other slot shares it
+    [nb] = alloc.acquire(1)
+    tab.replace(0, 1, nb, alloc)
+    assert tab.held(0) == [held[0], nb, held[2]]
+    assert alloc.refcount(held[1]) == 1   # only the other holder remains
+    freed = tab.release(0, alloc)
+    assert set(freed) == {held[0], held[2], nb}
+    assert alloc.stats.in_use == 1        # the shared original
+
+
+def test_assign_installs_preincrefd_chain():
+    """assign() trusts the caller's increfs (trie match / fork stash): the
+    installed chain reads back via held(), and release() returns only the
+    blocks whose last ref the slot held."""
+    alloc = BlockAllocator(8)
+    tab = SlotTables(2, 4, BS)
+    chain = alloc.acquire(2)              # e.g. matched trie blocks ...
+    alloc.incref(chain)                   # ... incref'd for the new slot
+    tab.assign(0, chain, 2 * BS)
+    assert tab.held(0) == chain and int(tab.lens[0]) == 2 * BS
+    assert tab.release(0, alloc) == []    # original holder still refs them
+    assert alloc.decref(chain) == chain

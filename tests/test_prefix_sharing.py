@@ -1,0 +1,247 @@
+"""Prefix-sharing serving engine: trie reuse, watermark preemption and
+parallel sampling are all BIT-identical to one-request-at-a-time decode,
+plus the ServingConfig construction surface (validation, from_flags, the
+one-release legacy-kwarg shim).
+
+Why bit-identity is even available: K/V content is a pure function of the
+absolute-position token prefix, so blocks cached by one request serve any
+other request with the same prefix exactly; greedy decode then makes
+preemption-resume (re-prefilling prompt + already-emitted tokens)
+deterministic. All pinned on attn="exact"; the kernel backend has its own
+preemption soak below (token equality, within-float-tolerance argmax).
+"""
+import argparse
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import SMOKES
+from repro.models import registry
+from repro.runtime.server import Request, Server, ServingConfig
+
+MAX_LEN = 64
+
+_FORCED = os.environ.get("REPRO_FORCE_JNP", "").strip().lower() in (
+    "1", "true", "yes")
+needs_pallas = pytest.mark.skipif(
+    _FORCED, reason="explicit Pallas attention backend; REPRO_FORCE_JNP "
+                    "leg is jnp-only")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = SMOKES["internlm2-1.8b"].replace(dtype="float32")
+    params = registry.init_params(jax.random.PRNGKey(0), cfg, max_seq=MAX_LEN)
+    mod = registry.get_module(cfg)
+    prefill = jax.jit(lambda p, b: mod.prefill(p, b, cfg, max_len=MAX_LEN))
+    decode = jax.jit(lambda p, t, c: mod.decode_step(p, t, c, cfg))
+
+    def one_at_a_time(prompt, n_new):
+        logits, cache = prefill(
+            params, {"tokens": jnp.asarray([prompt], jnp.int32)})
+        out = [int(jnp.argmax(logits[0]))]
+        while len(out) < n_new:
+            logits, cache = decode(
+                params, jnp.asarray([[out[-1]]], jnp.int32), cache)
+            out.append(int(jnp.argmax(logits[0])))
+        return out
+
+    return cfg, params, one_at_a_time
+
+
+def _mk(cfg, params, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("prefill_chunk", 4)
+    kw.setdefault("attn", "exact")
+    return Server(params, cfg, ServingConfig(paged=True, **kw))
+
+
+# ---------------------------------------------------------------------------
+# trie reuse
+# ---------------------------------------------------------------------------
+def test_shared_prefix_skips_prefill_bit_identical(setup):
+    """A follower sharing a 16-token prompt prefix with a drained request
+    prefills only its tail — and still emits exactly its single-request
+    tokens (the cached blocks ARE its prefix K/V)."""
+    cfg, params, one_at_a_time = setup
+    rng = np.random.RandomState(21)
+    prefix = rng.randint(0, cfg.vocab, size=16).tolist()
+    server = _mk(cfg, params)
+    warm = Request(prompt=prefix + [7, 7], max_new_tokens=3)
+    server.submit(warm)
+    server.run_until_drained()
+    assert server.trie.cached_blocks == 2          # 16 tokens / bs 8
+    before = server.metrics.prefill_tokens
+    follower = Request(prompt=prefix + [3, 1, 4], max_new_tokens=4)
+    server.submit(follower)
+    server.run_until_drained()
+    assert follower.output == one_at_a_time(follower.prompt, 4)
+    assert server.metrics.prefix_hit_tokens == 16
+    # only the 3-token tail went through the prefill path
+    assert server.metrics.prefill_tokens - before == 3
+    assert server.trie.hits == 1
+
+
+def test_sharing_on_off_same_tokens(setup):
+    """Sharing is a pure capacity optimization: identical token lists with
+    the trie on and off, on a mixed batch of overlapping prompts."""
+    cfg, params, _ = setup
+    rng = np.random.RandomState(23)
+    prefix = rng.randint(0, cfg.vocab, size=8).tolist()
+    prompts = [prefix + [t] for t in (5, 9)] + [prefix, [1, 2, 3]]
+
+    def drain(sharing):
+        srv = _mk(cfg, params, n_slots=4, prefix_sharing=sharing)
+        reqs = [Request(prompt=list(p), max_new_tokens=4) for p in prompts]
+        for r in reqs:
+            srv.submit(r)
+        srv.run_until_drained()
+        return [r.output for r in reqs], srv
+
+    on, srv_on = drain(True)
+    off, srv_off = drain(False)
+    assert on == off
+    assert srv_off.metrics.prefix_hit_tokens == 0
+    # sequential submits of one batch can't hit (all admitted before any
+    # prefill completes); the flush still proves the trie cached blocks
+    assert srv_on.flush_prefix_cache() > 0
+    assert srv_on.alloc.stats.in_use == 0
+
+
+def test_flush_prefix_cache_empty_and_disabled(setup):
+    cfg, params, _ = setup
+    assert _mk(cfg, params).flush_prefix_cache() == 0
+    assert _mk(cfg, params, prefix_sharing=False).flush_prefix_cache() == 0
+
+
+# ---------------------------------------------------------------------------
+# preemption
+# ---------------------------------------------------------------------------
+def test_preempted_lane_resumes_via_trie(setup):
+    """Under pool pressure with sharing ON, a preempted lane re-admits
+    through the trie (its own full blocks were registered at preemption),
+    so the resume re-prefills only the partial tail — tokens stay exactly
+    the single-request decode's."""
+    cfg, params, one_at_a_time = setup
+    # ample token budget: all three lanes prefill in lockstep, so the
+    # preempted lane has completed ≥ 1 full block (registered at
+    # preemption) and its resume provably goes through the trie
+    server = _mk(cfg, params, n_slots=3, num_blocks=5, watermark=0.0,
+                 token_budget=32)
+    rng = np.random.RandomState(29)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab, size=9).tolist(),
+                    max_new_tokens=6) for _ in range(3)]
+    for r in reqs:
+        server.submit(r)
+    server.run_until_drained()
+    for r in reqs:
+        assert r.output == one_at_a_time(r.prompt, 6)
+    assert server.metrics.preemptions > 0
+    assert server.metrics.prefix_hit_tokens > 0   # resumed through the trie
+    server.flush_prefix_cache()
+    assert server.alloc.stats.in_use == 0
+
+
+@needs_pallas
+def test_preemption_soak_kernel_backend(setup):
+    """The same pressure schedule on the Pallas attention backend: token
+    equality with one-at-a-time decode survives preemption + trie resume
+    on the kernel path too."""
+    cfg, params, one_at_a_time = setup
+    server = _mk(cfg, params, n_slots=3, num_blocks=5, watermark=0.0,
+                 token_budget=32, attn="kernel")
+    rng = np.random.RandomState(29)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab, size=9).tolist(),
+                    max_new_tokens=6) for _ in range(3)]
+    for r in reqs:
+        server.submit(r)
+    server.run_until_drained()
+    for r in reqs:
+        assert r.output == one_at_a_time(r.prompt, 6)
+    assert server.metrics.preemptions > 0
+
+
+# ---------------------------------------------------------------------------
+# parallel sampling
+# ---------------------------------------------------------------------------
+def test_parallel_samples_match_single_request(setup):
+    """n_samples=N: one prefill, N lanes forked copy-on-write off the
+    shared block chain. Greedy decode ⇒ every sample must equal the
+    single-request tokens — any cross-lane contamination through a shared
+    tail block breaks this immediately."""
+    cfg, params, one_at_a_time = setup
+    server = _mk(cfg, params, n_slots=4)
+    prompt = [11, 3, 8, 5, 2, 9, 14, 6, 1, 12, 4]   # 11 tokens: partial tail
+    req = Request(prompt=list(prompt), max_new_tokens=5, n_samples=3)
+    server.submit(req)
+    server.run_until_drained()
+    ref = one_at_a_time(prompt, 5)
+    assert req.output == ref
+    assert len(req.samples) == 2
+    for clone in req.samples:
+        assert clone.done and clone.output == ref
+    # parent + clones each privatized the shared partial tail block
+    assert server.metrics.cow_forks == 3
+    assert server.metrics.prefix_hit_tokens == 2 * len(prompt)
+
+
+def test_parallel_sampling_needs_paged_engine(setup):
+    cfg, params, _ = setup
+    srv = Server(params, cfg, ServingConfig(n_slots=2, max_len=MAX_LEN))
+    with pytest.raises(ValueError):
+        srv.submit(Request(prompt=[1, 2], max_new_tokens=2, n_samples=2))
+    with pytest.raises(ValueError):
+        _mk(cfg, params).submit(
+            Request(prompt=[1, 2], max_new_tokens=2, n_samples=0))
+
+
+# ---------------------------------------------------------------------------
+# ServingConfig surface
+# ---------------------------------------------------------------------------
+def test_serving_config_validation():
+    for bad in (dict(n_slots=0), dict(max_len=1), dict(prefill_chunk=0),
+                dict(token_budget=0), dict(watermark=1.0),
+                dict(watermark=-0.1), dict(paged=True, block_size=0),
+                dict(paged=True, max_len=100, block_size=16),
+                dict(paged=True, num_blocks=0), dict(attn="nope")):
+        with pytest.raises(ValueError):
+            ServingConfig(**bad)
+    assert ServingConfig(paged=True, max_len=128, block_size=16)
+
+
+def test_serving_config_from_flags():
+    args = argparse.Namespace(
+        slots=3, max_len=32, paged=True, block_size=8, num_blocks=None,
+        prefill_chunk=4, token_budget=7, attn="exact", watermark=0.25,
+        no_prefix_sharing=True, cim="bp-prequant")
+    sc = ServingConfig.from_flags(args, act_scale=0.5)
+    assert sc == ServingConfig(
+        n_slots=3, max_len=32, paged=True, block_size=8, prefill_chunk=4,
+        token_budget=7, attn="exact", watermark=0.25, prefix_sharing=False,
+        prequant=True, act_scale=0.5)
+    # missing attributes keep dataclass defaults
+    assert ServingConfig.from_flags(argparse.Namespace()) == ServingConfig()
+
+
+def test_legacy_kwarg_shim_warns_once_then_equivalent(setup):
+    cfg, params, _ = setup
+    with pytest.warns(DeprecationWarning, match="ServingConfig"):
+        srv = Server(params, cfg, n_slots=1, max_len=MAX_LEN, paged=True,
+                     block_size=8, prefill_chunk=4, attn="exact")
+    assert srv.serving == ServingConfig(
+        n_slots=1, max_len=MAX_LEN, paged=True, block_size=8,
+        prefill_chunk=4, attn="exact")
+    req = Request(prompt=[4, 2, 9], max_new_tokens=2)
+    srv.submit(req)
+    srv.run_until_drained()
+    assert req.done and len(req.output) == 2
+    with pytest.raises(TypeError):   # config AND legacy kwargs
+        Server(params, cfg, ServingConfig(), n_slots=2)
+    with pytest.raises(TypeError):   # unknown kwarg stays loud
+        Server(params, cfg, slots=2)

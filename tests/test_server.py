@@ -7,7 +7,7 @@ import pytest
 
 from repro.configs.registry import SMOKES
 from repro.models import registry
-from repro.runtime.server import Request, Server
+from repro.runtime.server import Request, Server, ServingConfig
 
 
 @pytest.fixture(scope="module")
@@ -31,7 +31,7 @@ def _greedy_reference(cfg, params, prompt, n_new):
 
 def test_single_request_matches_reference(setup):
     cfg, params = setup
-    server = Server(params, cfg, n_slots=1, max_len=64)
+    server = Server(params, cfg, ServingConfig(n_slots=1, max_len=64))
     req = Request(prompt=[5, 9, 2, 7], max_new_tokens=6)
     server.submit(req)
     server.run_until_drained()
@@ -42,7 +42,7 @@ def test_single_request_matches_reference(setup):
 
 def test_multi_request_batching_drains(setup):
     cfg, params = setup
-    server = Server(params, cfg, n_slots=2, max_len=64)
+    server = Server(params, cfg, ServingConfig(n_slots=2, max_len=64))
     rng = np.random.RandomState(0)
     reqs = [Request(prompt=rng.randint(0, cfg.vocab, size=int(rng.randint(3, 9))).tolist(),
                     max_new_tokens=4) for _ in range(5)]
@@ -55,7 +55,7 @@ def test_multi_request_batching_drains(setup):
 
 def test_eos_retires_slot(setup):
     cfg, params = setup
-    server = Server(params, cfg, n_slots=1, max_len=64)
+    server = Server(params, cfg, ServingConfig(n_slots=1, max_len=64))
     ref = _greedy_reference(cfg, params, [1, 2, 3], 8)
     eos = ref[2]  # force an early stop at the 3rd generated token
     req = Request(prompt=[1, 2, 3], max_new_tokens=8, eos_id=eos)
@@ -76,8 +76,8 @@ def test_prequant_packed_serving_matches_unpacked():
     params = registry.init_params(jax.random.PRNGKey(0), cfg, max_seq=64)
     outs = {}
     for packed in (True, False):
-        server = Server(params, cfg, n_slots=1, max_len=64,
-                        prequant=True, packed=packed)
+        server = Server(params, cfg, ServingConfig(
+            n_slots=1, max_len=64, prequant=True, packed=packed))
         if packed:
             q = [v for k, v in jax.tree_util.tree_flatten_with_path(
                      server.params)[0]
