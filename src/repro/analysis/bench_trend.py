@@ -43,7 +43,12 @@ Tracked columns (parsed from the bench rows; missing rows render as "—"):
     prefix-sharing paged pool vs the same pool with sharing disabled (the
     ×-concurrency factor the bench-smoke job gates at > 5×), plus the
     prefill tokens the trie absorbed — deterministic lane/token counts,
-    platform-free.
+    platform-free;
+  * (schema v6) the spec-decode serving row: speculative-vs-plain greedy
+    decode tok/s on the paged engine with the ngram drafter (warm-timed
+    legs, bit-identical outputs asserted in the bench) — the speedup the
+    bench-smoke job gates at ≥ 1.5×, plus the mean accepted length per
+    verify step (1 + accepted drafts, the number the speedup is made of).
 """
 from __future__ import annotations
 
@@ -125,6 +130,13 @@ def extract_metrics(doc: dict) -> dict:
             ts = re.search(r"prefill_tok_saved=(\d+)", derived)
             if ts:
                 out["prefix_tok_saved"] = int(ts.group(1))
+        if name.startswith("serve_spec_decode"):
+            sp = re.search(r"speedup=([\d.]+)x", derived)
+            if sp:
+                out["spec_speedup"] = float(sp.group(1))
+            ml = re.search(r"mean_accept_len=([\d.]+)", derived)
+            if ml:
+                out["spec_accept_len"] = float(ml.group(1))
         if name.startswith("serve_kv_bytes_occ25"):
             kb = re.search(
                 r"kv_bytes\s+slot=(\d+)\s+paged=(\d+)\s+\(([\d.]+)x", derived)
@@ -177,8 +189,10 @@ def render_markdown(entries: list[dict]) -> str:
         "| run | decode tok/s | packed weight HBM B | vs int8 | "
         "fused σ ratio | fused noisy µs | serve tok/s | attn-kernel tok/s | "
         "paged KV B @25% | vs slot | score B (kernel) | vs exact | "
-        "tuned speedup | prefix lanes | prefill tok saved |",
-        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|",
+        "tuned speedup | prefix lanes | prefill tok saved | spec speedup | "
+        "accept len |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---"
+        "|---|",
     ]
     for e in entries:
         m = e.get("metrics", {})
@@ -189,7 +203,7 @@ def render_markdown(entries: list[dict]) -> str:
                             f"({m.get('prefix_win', 0):.1f}×)")
         lines.append(
             "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} "
-            "| {} | {} | {} |"
+            "| {} | {} | {} | {} | {} |"
             .format(
                 str(e.get("label", "?"))[:24],
                 _fmt(m.get("decode_tok_s"), "{:.0f}"),
@@ -206,6 +220,8 @@ def render_markdown(entries: list[dict]) -> str:
                 _fmt(m.get("tune_speedup"), "{:.2f}×"),
                 prefix_lanes or "—",
                 _fmt(m.get("prefix_tok_saved"), "{:d}"),
+                _fmt(m.get("spec_speedup"), "{:.2f}×"),
+                _fmt(m.get("spec_accept_len"), "{:.2f}"),
             ))
     shapes = {e.get("metrics", {}).get("decode_shape") for e in entries}
     shapes.discard(None)

@@ -12,7 +12,8 @@ This module is the calibration half of that fix:
 
     tokens = jnp.asarray([[...prompt...]], jnp.int32)
     cal = calibrate_act_scale(params, tokens, cfg)
-    server = Server(params, cfg, ..., act_scale=cal["scale"])
+    server = Server(params, cfg,
+                    ServingConfig(..., act_scale=cal["scale"]))
 
 `collect_act_spans` runs one EAGER forward (layer scan unrolled so values
 are concrete) with a recorder hooked into core.quant.act_scale and returns
@@ -70,7 +71,7 @@ def calibrate_act_scale(params, tokens, cfg, *, percentile: float = 1.0,
     percentile < 1.0 drops the hottest call sites from the max (the VTC
     gain trade of Fig. 15: a tighter grid at the cost of clipping their
     tails). Returns {"scale", "spans", "span", "qmax"}; feed "scale" to
-    Server(act_scale=...) / ActQuantConfig.static_scale.
+    ServingConfig(act_scale=...) / ActQuantConfig.static_scale.
     """
     if not 0.0 < percentile <= 1.0:
         raise ValueError(f"percentile must be in (0, 1], got {percentile}")

@@ -24,6 +24,14 @@
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --paged --n-samples 4 [--no-prefix-sharing] [--watermark 0.1]
 
+  # speculative decoding: the ngram drafter proposes K tokens per decode
+  # lane, the target verifies them in ONE C=K+1 step; greedy streams are
+  # bit-identical to plain decode. --temperature/--top-k/--sample-seed
+  # switch the synthetic requests to seeded per-request sampling
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --paged --drafter ngram --spec-k 4 [--temperature 0.8 --top-k 40] \
+      [--trie-watermark 0.5]
+
   REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host [--paged]
       # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
@@ -52,6 +60,7 @@ from repro.core.cim_matmul import CIMConfig
 from repro.models import registry
 from repro.parallel import sharding
 from repro.runtime.server import Request, Server, ServingConfig
+from repro.runtime.speculative import SamplingParams
 
 
 def main():
@@ -97,6 +106,35 @@ def main():
                     help="parallel samples per request (paged engine): one "
                          "shared prefill, N continuations forked "
                          "copy-on-write off the cached prefix")
+    ap.add_argument("--drafter", default="off", metavar="SPEC",
+                    help="speculative-decoding drafter "
+                         "(runtime.speculative registry; paged engine): "
+                         "off = plain decode, ngram = prompt-lookup "
+                         "self-speculation, model:<name> = a small draft "
+                         "model from configs.registry — the target "
+                         "verifies all drafts in one C=spec-k+1 step; "
+                         "token streams stay distribution-identical "
+                         "(bit-identical under greedy)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="drafted tokens per decode lane per verify step "
+                         "(default 4; only meaningful with --drafter)")
+    ap.add_argument("--trie-watermark", type=float, default=None,
+                    help="prefix-cache capacity fraction: when the trie "
+                         "caches more than this fraction of the pool, an "
+                         "LRU sweep (run every step, idle ones included) "
+                         "drains it to half that — keeps long-lived "
+                         "servers from pinning the pool in cold cache "
+                         "(default: no sweep)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature for the synthetic requests "
+                         "(0 = greedy; >0 samples the softmax with a "
+                         "per-request seeded PRNG — bit-reproducible and "
+                         "batch-composition invariant)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the k highest logits "
+                         "(0 = full vocab; needs --temperature > 0)")
+    ap.add_argument("--sample-seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed + i")
     ap.add_argument("--attn", choices=("auto", "exact", "kernel"),
                     default="auto",
                     help="paged attention backend (kernels.paged_attention "
@@ -185,7 +223,11 @@ def main():
             plen = int(rng.randint(4, 17))
             prompt = rng.randint(0, cfg.vocab, size=plen).tolist()
             r = Request(prompt=prompt, max_new_tokens=args.max_new,
-                        n_samples=args.n_samples)
+                        n_samples=args.n_samples,
+                        sampling=SamplingParams(
+                            temperature=args.temperature,
+                            top_k=args.top_k,
+                            seed=args.sample_seed + i))
             server.submit(r)
             reqs.append(r)
         server.run_until_drained()
@@ -217,7 +259,16 @@ def main():
         print(f"sharing: prefix_hit_tokens={m['prefix_hit_tokens']} "
               f"cow_forks={m['cow_forks']} "
               f"preemptions={m['preemptions']} "
-              f"peak_active={m['peak_active']}")
+              f"peak_active={m['peak_active']} "
+              f"trie_sweep_freed={m['trie_sweep_freed']}")
+        if args.drafter != "off":
+            hist = ",".join(f"{a}:{n}" for a, n in m["accept_hist"].items())
+            print(f"speculative: drafter={args.drafter} "
+                  f"spec_k={server.serving.spec_k} "
+                  f"verify_steps={m['spec_steps']} "
+                  f"accept_rate={m['accept_rate']:.2f} "
+                  f"mean_accept_len={m['mean_accept_len']:.2f} "
+                  f"accept_hist=[{hist}]")
 
 
 if __name__ == "__main__":

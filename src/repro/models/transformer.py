@@ -491,7 +491,7 @@ def _paged_stack(stacked, pools, h, cfg, *, positions, flat_idx, tables,
 
 def paged_step(params: dict, tokens: jax.Array, cache: dict,
                tables: jax.Array, lens: jax.Array, valid: jax.Array,
-               cfg: ModelConfig):
+               cfg: ModelConfig, all_logits: bool = False):
     """One unified serving step over the paged pool: prefill chunks and
     decode are the SAME function (decode is the C=1 compilation).
 
@@ -503,10 +503,15 @@ def paged_step(params: dict, tokens: jax.Array, cache: dict,
     block), attends per-slot through the attention backend selected by
     cfg.attn_backend (kernels.paged_attention: "exact" window softmax vs
     the Pallas flash "kernel" whose live scores are one [C·G, bs] tile),
-    and returns (logits [B, V] taken at each slot's LAST valid position,
-    updated pool). The host scheduler decides whose logits mean anything
-    this step (decode slots every step; prefilling slots only on their
-    final chunk).
+    and returns (logits, updated pool). By default logits are [B, V] taken
+    at each slot's LAST valid position — prefill lanes only ever need
+    their final chunk's last row. `all_logits=True` (a trace-time flag:
+    the server jits it as a separate compilation) unembeds EVERY chunk
+    position instead, returning [B, C, V] — the speculative-decoding
+    verify shape, where one C=K+1 call scores all K drafted tokens plus
+    the bonus position. The host scheduler decides whose logits mean
+    anything this step (decode slots every step; prefilling slots only on
+    their final chunk).
     """
     b, c = tokens.shape
     block_size = jax.tree_util.tree_leaves(cache)[0].shape[2]
@@ -538,6 +543,8 @@ def paged_step(params: dict, tokens: jax.Array, cache: dict,
                           tables=tables, kv_len=kv_len)
     new_cache["layers"] = np_
     x = norm(params["final_norm"], x, cfg)
+    if all_logits:
+        return unembed(params["tok"], x, cfg), new_cache        # [B, C, V]
     last = jnp.maximum(valid - 1, 0)                            # [B]
     h_last = jnp.take_along_axis(
         x, last[:, None, None].astype(jnp.int32), axis=1)[:, 0]

@@ -180,6 +180,8 @@ class PrefixTrie:
         self.hits = 0            # match() calls that returned >= 1 block
         self.hit_blocks = 0      # blocks returned across all matches
         self.evictions = 0       # blocks freed by evict()/forget_block()
+        self.sweeps = 0          # watermark sweeps that freed something
+        self.sweep_freed = 0     # blocks freed by those sweeps
 
     # -- introspection -----------------------------------------------------
     @property
@@ -284,6 +286,28 @@ class PrefixTrie:
             if best is None:
                 break
             freed += self._drop_node(best, alloc)
+        return freed
+
+    def sweep(self, alloc: BlockAllocator, high: int, low: int) -> int:
+        """High/low-watermark capacity sweep: when the trie caches more
+        than `high` blocks, LRU-evict down toward `low` (both absolute
+        block counts — the server derives them from a pool fraction,
+        ServingConfig.trie_watermark). The point: a long-lived server's
+        trie otherwise retains every cold prefix it ever saw, pinning the
+        whole pool as cache between bursts; the sweep runs from step()
+        even on idle steps, so capacity drains back WITHOUT waiting for
+        admission pressure. Best-effort: entries whose block a live slot
+        still maps are skipped (evicting them would free nothing).
+        Returns blocks actually freed; hysteresis (low < high) keeps the
+        sweep from thrashing at the threshold."""
+        if low > high:
+            raise ValueError(f"low watermark {low} > high {high}")
+        if self.cached_blocks <= high:
+            return 0
+        freed = self.evict(self.cached_blocks - low, alloc)
+        if freed:
+            self.sweeps += 1
+            self.sweep_freed += freed
         return freed
 
     def forget_block(self, block: int, alloc: BlockAllocator) -> None:

@@ -9,9 +9,9 @@ Construction goes through ONE config object::
 
 `ServingConfig` consolidates what used to be an 11-keyword constructor
 sprawl; validation lives in its `__post_init__`, and `from_flags(args)`
-builds one from an argparse namespace (launch.serve). Legacy keyword
-construction (`Server(params, cfg, n_slots=..., ...)`) still works for one
-release behind a DeprecationWarning.
+builds one from an argparse namespace (launch.serve). The PR-7 one-release
+legacy keyword shim (`Server(params, cfg, n_slots=..., ...)`) is retired:
+bare keyword construction now raises TypeError pointing here.
 
 Two engines share one Server front end (submit / step / run_until_drained):
 
@@ -70,8 +70,13 @@ Two engines share one Server front end (submit / step / run_until_drained):
   equivalence with this path is exact only on depth-aligned schedules —
   see tests/test_server_paged.py.
 
-Greedy sampling; EOS/max-token retirement releases slots and block refs.
-One deliberate semantic divergence: the legacy engine applies neither the
+Sampling is per-request: `Request.sampling` carries a `SamplingParams`
+(runtime.speculative) — greedy argmax by default (every bit-identity soak
+pins that setting), or seeded temperature/top-k sampling whose draws are
+keyed by (request seed, emission index) and therefore bit-reproducible and
+batch-composition invariant. EOS/max-token retirement releases slots and
+block refs. One deliberate semantic divergence: the legacy engine applies
+neither the
 max_new_tokens nor the eos_id check to the token emitted at prefill time;
 the paged engine checks both and retires immediately, matching
 one-request-at-a-time decode. Unservable requests (prompt ≥ max_len, or a
@@ -94,12 +99,28 @@ depend on batch COMPOSITION — prefix sharing and preemption inherit that
 caveat identically. The production fix is `ServingConfig(act_scale=...)`:
 a static calibrated scale (analysis.calibrate) pins one fixed input-DAC
 grid for every lane — pinned by tests/test_calibrate.py.
+
+Speculative decoding (paged engine, PR 8): `ServingConfig(drafter=...)`
+selects a drafter from the runtime.speculative registry ("off" — plain
+decode; "ngram" — prompt-lookup self-speculation; "model:<name>" — a small
+draft model from configs.registry). Each decode lane's drafter proposes up
+to `spec_k` tokens from the lane's committed stream; the target verifies
+all of them in ONE C=spec_k+1 `paged_step` (the all-positions-logits
+compilation) and the longest agreeing prefix is accepted under exact
+rejection sampling (runtime.speculative.verify_token) — token streams are
+distribution-identical to plain decode and bit-identical under greedy.
+The block pool makes rollback free: the verify step writes its K+1 K/V
+entries into the lane's own blocks, and a rejection simply truncates the
+committed `kv_len` (rejected positions are overwritten by the next step's
+writes and are never readable — attention masks >= kv_len). Drafting,
+clamping and accept/reject depend only on the lane's own state, so the
+spec path preserves batch-composition invariance and preemption-resume
+determinism.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Optional
 
 import jax
@@ -109,6 +130,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import registry
 from repro.runtime.paging import BlockAllocator, PrefixTrie, SlotTables
+from repro.runtime.speculative import SamplingParams, make_drafter, \
+    parse_drafter, sample_token, verify_token
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,6 +152,14 @@ class ServingConfig:
     codes (models.quantize), nibble-packed when `packed`. `attn` picks the
     paged attention backend; `act_scale` pins a static calibrated
     activation scale (analysis.calibrate) — needs cfg.cim.enabled.
+    Speculative decoding (paged only): `drafter` picks a proposer from the
+    runtime.speculative registry ("off" / "ngram" / "model:<name>") and
+    `spec_k` caps drafted tokens per lane per verify step. Trie capacity
+    (paged + prefix_sharing): `trie_watermark` is a pool fraction — when
+    the prefix cache exceeds it, an LRU sweep drains it to half that, so
+    long-lived servers stop pinning the whole pool in cold cache between
+    bursts (None disables; eviction then happens only under admission
+    pressure).
     """
     n_slots: int = 4
     max_len: int = 128
@@ -143,6 +174,9 @@ class ServingConfig:
     act_scale: Optional[float] = None
     prefix_sharing: bool = True
     watermark: float = 1 / 16
+    drafter: str = "off"
+    spec_k: int = 4
+    trie_watermark: Optional[float] = None
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -163,8 +197,22 @@ class ServingConfig:
                 raise ValueError("num_blocks must be >= 1")
         if not 0.0 <= self.watermark < 1.0:
             raise ValueError("watermark is a pool fraction in [0, 1)")
+        if self.spec_k < 1:
+            raise ValueError("spec_k must be >= 1 (tokens drafted per "
+                             "verify step)")
         from repro.kernels.paged_attention import choose_attn_backend
         choose_attn_backend(self.attn)   # validate the name up front
+        name, _ = parse_drafter(self.drafter)   # validate like attn
+        if name != "off" and not self.paged:
+            raise ValueError("speculative decoding (drafter != 'off') "
+                             "needs the paged engine (paged=True)")
+        if self.trie_watermark is not None:
+            if not 0.0 < self.trie_watermark <= 1.0:
+                raise ValueError("trie_watermark is a pool fraction in "
+                                 "(0, 1]")
+            if not (self.paged and self.prefix_sharing):
+                raise ValueError("trie_watermark needs the paged engine "
+                                 "with prefix_sharing enabled")
 
     @classmethod
     def from_flags(cls, args, **overrides) -> "ServingConfig":
@@ -177,7 +225,9 @@ class ServingConfig:
                  ("num_blocks", "num_blocks"),
                  ("prefill_chunk", "prefill_chunk"),
                  ("token_budget", "token_budget"), ("attn", "attn"),
-                 ("watermark", "watermark")]
+                 ("watermark", "watermark"), ("drafter", "drafter"),
+                 ("spec_k", "spec_k"),
+                 ("trie_watermark", "trie_watermark")]
         for field, flag in pairs:
             v = getattr(args, flag, None)
             if v is not None:
@@ -195,7 +245,11 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
-    n_samples: int = 1       # paged engine: greedy continuations off one prefill
+    n_samples: int = 1       # paged engine: continuations off one prefill
+    # per-request sampling policy (runtime.speculative): greedy default;
+    # temperature/top-k draws are keyed by (sampling.seed, emission index)
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     # filled by the server:
     rid: int = -1
     output: list[int] = dataclasses.field(default_factory=list)
@@ -225,6 +279,12 @@ class ServerMetrics:
     preemptions: int = 0       # lanes evicted under pool pressure
     prefix_hit_tokens: int = 0  # prefill tokens skipped via shared blocks
     cow_forks: int = 0         # shared blocks privatized before a write
+    spec_steps: int = 0        # speculative verify steps run
+    draft_tokens: int = 0      # tokens proposed by the drafter
+    draft_accepted: int = 0    # proposed tokens accepted by verification
+    # accept-length histogram: {accepted drafts per verify step: count}
+    accept_hist: dict = dataclasses.field(default_factory=dict)
+    trie_sweep_freed: int = 0  # blocks freed by trie watermark sweeps
     peak_active: int = 0       # max concurrently active lanes in a step
     peak_decode_lanes: int = 0  # max lanes past prefill in one step — the
     #                             pool-capacity-limited concurrency (admitted
@@ -244,30 +304,34 @@ class ServerMetrics:
                 "preemptions": self.preemptions,
                 "prefix_hit_tokens": self.prefix_hit_tokens,
                 "cow_forks": self.cow_forks,
+                "spec_steps": self.spec_steps,
+                "draft_tokens": self.draft_tokens,
+                "draft_accepted": self.draft_accepted,
+                "accept_rate": self.draft_accepted / self.draft_tokens
+                if self.draft_tokens else 0.0,
+                # mean emissions per verify step (accepted drafts + the
+                # correction/bonus token) — tokens-per-target-call, the
+                # speculative speedup axis
+                "mean_accept_len": 1.0 + self.draft_accepted
+                / self.spec_steps if self.spec_steps else 0.0,
+                "accept_hist": dict(sorted(self.accept_hist.items())),
+                "trie_sweep_freed": self.trie_sweep_freed,
                 "peak_active": self.peak_active,
                 "peak_decode_lanes": self.peak_decode_lanes,
                 "wall_s": self.wall_s}
-
-
-_LEGACY_KWARGS = tuple(f.name for f in dataclasses.fields(ServingConfig))
 
 
 class Server:
     def __init__(self, params, cfg: ModelConfig,
                  serving: ServingConfig | None = None, **legacy):
         if legacy:
-            if serving is not None:
-                raise TypeError("pass a ServingConfig OR legacy keyword "
-                                "arguments, not both")
-            unknown = set(legacy) - set(_LEGACY_KWARGS)
-            if unknown:
-                raise TypeError(f"unknown Server kwargs: {sorted(unknown)}")
-            warnings.warn(
-                "Server(params, cfg, n_slots=..., ...) keyword construction "
-                "is deprecated; pass Server(params, cfg, ServingConfig(...))",
-                DeprecationWarning, stacklevel=2)
-            serving = ServingConfig(**legacy)
-        elif serving is None:
+            # the PR-7 one-release DeprecationWarning shim is retired:
+            # keyword construction fails loudly with the migration target
+            raise TypeError(
+                f"Server() no longer accepts bare keyword arguments "
+                f"{sorted(legacy)}; construct a ServingConfig and pass "
+                "Server(params, cfg, ServingConfig(...))")
+        if serving is None:
             serving = ServingConfig()
         self.serving = serving
         cfg = cfg.replace(attn_backend=serving.attn)
@@ -320,6 +384,21 @@ class Server:
             self._pstep = jax.jit(
                 lambda p, t, c, tb, ln, vd:
                     self.mod.paged_step(p, t, c, tb, ln, vd, cfg))
+            # speculative decoding: the drafter instance (None = off) and
+            # the all-positions-logits compilation its verify steps use
+            # (one C=spec_k+1 call scores every drafted token at once)
+            self.spec_k = serving.spec_k
+            self.drafter = make_drafter(serving.drafter, cfg, self.max_len)
+            self._pstep_all = jax.jit(
+                lambda p, t, c, tb, ln, vd:
+                    self.mod.paged_step(p, t, c, tb, ln, vd, cfg,
+                                        all_logits=True))
+            # trie capacity watermarks (block counts; 0 = sweep disabled)
+            self._trie_hi = self._trie_lo = 0
+            if self.trie is not None and serving.trie_watermark is not None:
+                self._trie_hi = max(1, int(num_blocks
+                                           * serving.trie_watermark))
+                self._trie_lo = self._trie_hi // 2
             # CoW block copy: one compilation (src/dst are traced scalars),
             # donated pools so the fork is an in-place device copy
             self._cow = jax.jit(
@@ -355,6 +434,10 @@ class Server:
             raise ValueError("empty prompt")
         if req.n_samples < 1:
             raise ValueError("n_samples must be >= 1")
+        if not isinstance(req.sampling, SamplingParams):
+            raise ValueError("Request.sampling must be a SamplingParams "
+                             f"(runtime.speculative), got "
+                             f"{type(req.sampling).__name__}")
         if self.paged:
             if len(req.prompt) >= self.max_len - 1:
                 raise ValueError(
@@ -377,10 +460,15 @@ class Server:
         self._next_rid += 1
         if self.paged and req.n_samples > 1:
             kids = []
-            for _ in range(req.n_samples - 1):
+            for i in range(req.n_samples - 1):
+                # clones get distinct PRNG streams (seed + sibling index)
+                # so sampled parallel continuations actually diverge;
+                # greedy clones stay bit-identical to the parent
                 c = Request(prompt=list(req.prompt),
                             max_new_tokens=req.max_new_tokens,
-                            eos_id=req.eos_id)
+                            eos_id=req.eos_id,
+                            sampling=dataclasses.replace(
+                                req.sampling, seed=req.sampling.seed + i + 1))
                 c.rid = self._next_rid
                 self._next_rid += 1
                 c.t_submit = req.t_submit
@@ -408,7 +496,8 @@ class Server:
         tokens = jnp.asarray([req.prompt], jnp.int32)
         batch = {"tokens": tokens}
         logits, rcache = self._prefill(self.params, batch)
-        first = int(jnp.argmax(logits[0]))
+        first = sample_token(np.asarray(logits[0]), req.sampling,
+                             len(req.output))
         req.output.append(first)
         req.t_first = time.monotonic()
         self.metrics.prefill_tokens += len(req.prompt)
@@ -422,6 +511,12 @@ class Server:
         t0 = time.monotonic()
         if self.paged:
             self._step_paged()
+            # trie capacity policy: the watermark sweep runs every step —
+            # including idle ones, where _step_paged returns early — so a
+            # long-lived server's cold prefix cache drains between bursts
+            if self._trie_hi and self.trie is not None:
+                self.metrics.trie_sweep_freed += self.trie.sweep(
+                    self.alloc, self._trie_hi, self._trie_lo)
         else:
             self._step_slots()
         self.metrics.wall_s += time.monotonic() - t0
@@ -440,13 +535,14 @@ class Server:
         self.cache["pos"] = jnp.asarray(pos, jnp.int32)
         logits, self.cache = self._decode(self.params, jnp.asarray(toks),
                                           self.cache)
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        rows = np.asarray(logits)
         for s in active:
             req = self.slot_req[s]
-            req.output.append(int(nxt[s]))
+            nxt = sample_token(rows[s], req.sampling, len(req.output))
+            req.output.append(nxt)
             self.metrics.decode_tokens += 1
             exhausted = len(req.output) >= req.max_new_tokens
-            hit_eos = req.eos_id is not None and int(nxt[s]) == req.eos_id
+            hit_eos = req.eos_id is not None and nxt == req.eos_id
             if exhausted or hit_eos or pos + 1 >= self.max_len - 1:
                 req.done = True
                 req.t_done = time.monotonic()
@@ -588,7 +684,8 @@ class Server:
             if not active:
                 return
             decode_lanes, dropped, takes, starved = self._schedule(active)
-            valid_map = {s: 1 for s in decode_lanes}
+            spec = self._plan_spec(decode_lanes)
+            valid_map = {s: 1 + len(spec.get(s, ())) for s in decode_lanes}
             valid_map.update(takes)
             need, copies = self._write_plan(valid_map)
             if need <= self._available() or len(active) == 1:
@@ -624,35 +721,53 @@ class Server:
             if v:
                 self.tables.grow(s, int(self.tables.lens[s]) + v,
                                  self.alloc)
-        # steps whose prefill lanes are all budget-starved run the cheap
-        # C=1 decode compilation, not a chunk-wide call for 1-token lanes
-        c = self.prefill_chunk if takes else 1
+        # chunk width: steps whose prefill lanes are all budget-starved run
+        # the cheap C=1 decode compilation; spec verify lanes always stamp
+        # C=spec_k+1 (per-lane clamps shrink `valid`, never the traced
+        # shape, so the compiled-shape set stays bounded)
+        c = 1
+        if takes:
+            c = self.prefill_chunk
+        if spec:
+            c = max(c, self.spec_k + 1)
         toks = np.zeros((self.n_slots, c), np.int32)
         valid = np.zeros(self.n_slots, np.int32)
         for s in decode_lanes:
             toks[s, 0] = self.slot_req[s].output[-1]
-            valid[s] = 1
+            drafts = spec.get(s, ())
+            toks[s, 1:1 + len(drafts)] = drafts
+            valid[s] = 1 + len(drafts)
         for s, take in takes.items():
             done = int(self._pf_done[s])
             src = self._pf_src[s]
             toks[s, :take] = src[done:done + take]
             valid[s] = take
-        logits, self.cache = self._pstep(
+        # verify steps need the logits at EVERY chunk position (one row
+        # per drafted token plus the bonus); everything else keeps the
+        # last-position compilation
+        pstep = self._pstep_all if spec else self._pstep
+        logits, self.cache = pstep(
             self.params, jnp.asarray(toks), self.cache,
             jnp.asarray(self.tables.tables), jnp.asarray(self.tables.lens),
             jnp.asarray(valid))
-        nxt = np.asarray(jnp.argmax(logits, -1))
+        rows = np.asarray(logits)               # [B, V] or [B, C, V]
         now = time.monotonic()
         for s in active:
             if not valid[s]:
                 continue
             req = self.slot_req[s]
-            self.tables.lens[s] += int(valid[s])
             if s in takes:
+                self.tables.lens[s] += int(valid[s])
                 self._pf_done[s] += int(valid[s])
                 self.metrics.prefill_tokens += int(valid[s])
                 if self._pf_done[s] == len(self._pf_src[s]):
-                    req.output.append(int(nxt[s]))  # first generated token
+                    row = rows[s, int(valid[s]) - 1] if rows.ndim == 3 \
+                        else rows[s]
+                    # emission index = len(output): 0 for a fresh prompt,
+                    # the resume index after preemption — either way the
+                    # same (seed, index) PRNG key plain decode would use
+                    req.output.append(
+                        sample_token(row, req.sampling, len(req.output)))
                     if not req.t_first:
                         req.t_first = now
                     self._register_prefix(s)
@@ -665,16 +780,98 @@ class Server:
                                 and req.output[-1] == req.eos_id)):
                         self._retire_paged(s, now)
                 continue
-            req.output.append(int(nxt[s]))
+            if s in spec:
+                self._apply_verify(s, rows[s], spec[s], now)
+                continue
+            self.tables.lens[s] += 1
+            row = rows[s, 0] if rows.ndim == 3 else rows[s]
+            nxt = sample_token(row, req.sampling, len(req.output))
+            req.output.append(nxt)
             self.metrics.decode_tokens += 1
             exhausted = len(req.output) >= req.max_new_tokens
-            hit_eos = req.eos_id is not None and int(nxt[s]) == req.eos_id
+            hit_eos = req.eos_id is not None and nxt == req.eos_id
             full = int(self.tables.lens[s]) + 1 >= self.max_len - 1
             if exhausted or hit_eos or full:
                 self._retire_paged(s, now)
         self.steps_run += 1
         self.metrics.steps += 1
         self._admit()
+
+    def _plan_spec(self, decode_lanes) -> dict[int, list[int]]:
+        """Draft proposals for this step's decode lanes: {slot: tokens}.
+
+        Per-lane k is clamped so the verify step never proposes past the
+        request's remaining allowance (the correction/bonus token always
+        fits) nor writes past the slot window. Both clamps and the
+        proposals themselves are functions of the lane's OWN state, so
+        spec scheduling stays batch-composition invariant — a lane drafts
+        the same tokens whether it serves alone or in a full batch.
+        Lanes clamped to k=0 fall back to plain 1-token decode."""
+        if self.drafter is None:
+            return {}
+        spec = {}
+        for s in decode_lanes:
+            req = self.slot_req[s]
+            lens0 = int(self.tables.lens[s])
+            k = min(self.spec_k,
+                    req.max_new_tokens - len(req.output) - 1,
+                    self.max_len - 2 - lens0)
+            if k > 0:
+                drafts = self.drafter.propose(req.prompt + req.output, k)
+                spec[s] = [int(t) for t in drafts]
+        return spec
+
+    def _apply_verify(self, s: int, rows, drafts: list[int], now: float):
+        """Commit one lane's verify-step results.
+
+        Walks the per-position target rows in plain-decode order (emission
+        index = len(output)): each drafted token is accepted or replaced
+        via exact rejection sampling (runtime.speculative.verify_token);
+        the first rejection's row already yields the replacement, and a
+        fully-accepted run earns the bonus token from the last row.
+        Retirement checks (exhaustion / EOS / window-full) run after every
+        emission exactly as the plain decode loop would. Rollback is free:
+        kv_len is TRUNCATED to the committed prefix (prev token + matched
+        drafts); rejected positions stay as garbage past kv_len until the
+        next step's writes overwrite them — never readable, attention
+        masks >= kv_len."""
+        req = self.slot_req[s]
+        lens0 = int(self.tables.lens[s])
+        matched = emitted = 0
+        retire = False
+        self.metrics.spec_steps += 1
+        self.metrics.draft_tokens += len(drafts)
+        for i in range(len(drafts) + 1):
+            idx = len(req.output)
+            if i < len(drafts):
+                tok, ok = verify_token(rows[i], drafts[i], req.sampling,
+                                       idx)
+            else:   # every draft matched: the bonus row is a free token
+                tok, ok = sample_token(rows[i], req.sampling, idx), False
+            req.output.append(int(tok))
+            emitted += 1
+            if ok:
+                matched += 1
+            self.metrics.decode_tokens += 1
+            exhausted = len(req.output) >= req.max_new_tokens
+            hit_eos = req.eos_id is not None and int(tok) == req.eos_id
+            # plain-decode parity: before this emission the plain loop
+            # would have written lens0 + emitted tokens and checked
+            # lens + 1 against max_len - 1
+            full = lens0 + emitted + 1 >= self.max_len - 1
+            if exhausted or hit_eos or full:
+                retire = True
+                break
+            if not ok:
+                break
+        self.metrics.draft_accepted += matched
+        self.metrics.accept_hist[matched] = \
+            self.metrics.accept_hist.get(matched, 0) + 1
+        # rollback-by-truncation: the committed K/V covers the fed prev
+        # token plus the matched drafts; everything past that is garbage
+        self.tables.lens[s] = lens0 + 1 + matched
+        if retire:
+            self._retire_paged(s, now)
 
     def _register_prefix(self, slot: int):
         """Cache the completed prefill's full prompt blocks in the trie so

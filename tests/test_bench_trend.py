@@ -52,6 +52,12 @@ def _doc(us_decode=400.0, ratio=1.02):
              "derived": "peak_lanes shared=7 nosharing=1 (7.0x)|"
                         "prefill_tok_saved=336|"
                         "preempt shared=0 nosharing=21"},
+            # schema-v6 spec-decode serving row: speculative-vs-plain
+            # greedy tok/s plus the accept-length statistics
+            {"name": "serve_spec_decode_k4_s2", "us": 400.0,
+             "derived": "spec_tok_s=2511.6|plain_tok_s=1128.8|"
+                        "speedup=2.23x|accept_rate=0.47|"
+                        "mean_accept_len=2.87|hist=0:50;1:6;2:7;3:2;4:45"},
         ],
     }
 
@@ -86,6 +92,9 @@ def test_extract_metrics():
     assert m["prefix_lanes_base"] == 1
     assert m["prefix_win"] == pytest.approx(7.0)
     assert m["prefix_tok_saved"] == 336
+    # schema-v6 spec-decode serving row
+    assert m["spec_speedup"] == pytest.approx(2.23)
+    assert m["spec_accept_len"] == pytest.approx(2.87)
 
 
 def test_extract_metrics_tolerates_missing_rows():
@@ -122,9 +131,10 @@ def test_history_append_and_render(tmp_path):
     assert "9.5" in md and "128×" in md    # v3 attn-kernel + score probe
     assert "6.07×" in md                   # v4 tuned-vs-default speedup
     assert "7 vs 1 (7.0×)" in md and "336" in md  # v5 shared-prefix row
-    # table stays well-formed: every data row has the 15 columns
+    assert "2.23×" in md and "2.87" in md         # v6 spec-decode row
+    # table stays well-formed: every data row has the 17 columns
     rows = [ln for ln in md.splitlines() if ln.startswith("| run-")]
-    assert all(ln.count("|") == 16 for ln in rows)
+    assert all(ln.count("|") == 18 for ln in rows)
 
 
 def test_one_shot_mode(tmp_path):

@@ -1,7 +1,8 @@
 """Prefix-sharing serving engine: trie reuse, watermark preemption and
 parallel sampling are all BIT-identical to one-request-at-a-time decode,
-plus the ServingConfig construction surface (validation, from_flags, the
-one-release legacy-kwarg shim).
+plus the ServingConfig construction surface (validation, from_flags, and
+the retirement of the PR-7 legacy-kwarg shim: bare keyword construction
+is now a TypeError).
 
 Why bit-identity is even available: K/V content is a pure function of the
 absolute-position token prefix, so blocks cached by one request serve any
@@ -209,39 +210,63 @@ def test_serving_config_validation():
                 dict(token_budget=0), dict(watermark=1.0),
                 dict(watermark=-0.1), dict(paged=True, block_size=0),
                 dict(paged=True, max_len=100, block_size=16),
-                dict(paged=True, num_blocks=0), dict(attn="nope")):
+                dict(paged=True, num_blocks=0), dict(attn="nope"),
+                # PR-8 fields: drafter registry + spec_k + trie watermark
+                dict(paged=True, max_len=128, block_size=16,
+                     drafter="nope"),
+                dict(paged=True, max_len=128, block_size=16,
+                     drafter="model:not-a-smoke"),
+                dict(drafter="ngram"),              # needs the paged engine
+                dict(paged=True, max_len=128, block_size=16, spec_k=0),
+                dict(paged=True, max_len=128, block_size=16,
+                     trie_watermark=1.5),
+                dict(paged=True, max_len=128, block_size=16,
+                     prefix_sharing=False, trie_watermark=0.5),
+                dict(trie_watermark=0.5)):          # needs the paged engine
         with pytest.raises(ValueError):
             ServingConfig(**bad)
     assert ServingConfig(paged=True, max_len=128, block_size=16)
+    assert ServingConfig(paged=True, max_len=128, block_size=16,
+                         drafter="ngram", spec_k=2, trie_watermark=0.75)
 
 
 def test_serving_config_from_flags():
     args = argparse.Namespace(
         slots=3, max_len=32, paged=True, block_size=8, num_blocks=None,
         prefill_chunk=4, token_budget=7, attn="exact", watermark=0.25,
-        no_prefix_sharing=True, cim="bp-prequant")
+        no_prefix_sharing=False, cim="bp-prequant",
+        drafter="ngram", spec_k=2, trie_watermark=0.75)
     sc = ServingConfig.from_flags(args, act_scale=0.5)
     assert sc == ServingConfig(
         n_slots=3, max_len=32, paged=True, block_size=8, prefill_chunk=4,
-        token_budget=7, attn="exact", watermark=0.25, prefix_sharing=False,
-        prequant=True, act_scale=0.5)
+        token_budget=7, attn="exact", watermark=0.25,
+        prequant=True, act_scale=0.5,
+        drafter="ngram", spec_k=2, trie_watermark=0.75)
+    # --no-prefix-sharing still maps through
+    assert not ServingConfig.from_flags(argparse.Namespace(
+        paged=True, max_len=32, block_size=8,
+        no_prefix_sharing=True)).prefix_sharing
     # missing attributes keep dataclass defaults
     assert ServingConfig.from_flags(argparse.Namespace()) == ServingConfig()
 
 
-def test_legacy_kwarg_shim_warns_once_then_equivalent(setup):
+def test_legacy_kwarg_shim_retired(setup):
+    """The PR-7 one-release DeprecationWarning shim is gone: bare keyword
+    construction raises a TypeError that names ServingConfig, whether the
+    kwargs were once-supported names or never existed."""
     cfg, params, _ = setup
-    with pytest.warns(DeprecationWarning, match="ServingConfig"):
-        srv = Server(params, cfg, n_slots=1, max_len=MAX_LEN, paged=True,
-                     block_size=8, prefill_chunk=4, attn="exact")
-    assert srv.serving == ServingConfig(
+    with pytest.raises(TypeError, match="ServingConfig"):
+        Server(params, cfg, n_slots=1, max_len=MAX_LEN, paged=True,
+               block_size=8, prefill_chunk=4, attn="exact")
+    with pytest.raises(TypeError, match="ServingConfig"):   # config + kwargs
+        Server(params, cfg, ServingConfig(), n_slots=2)
+    with pytest.raises(TypeError, match="ServingConfig"):   # unknown kwarg
+        Server(params, cfg, slots=2)
+    # the blessed path still works end to end
+    srv = Server(params, cfg, ServingConfig(
         n_slots=1, max_len=MAX_LEN, paged=True, block_size=8,
-        prefill_chunk=4, attn="exact")
+        prefill_chunk=4, attn="exact"))
     req = Request(prompt=[4, 2, 9], max_new_tokens=2)
     srv.submit(req)
     srv.run_until_drained()
     assert req.done and len(req.output) == 2
-    with pytest.raises(TypeError):   # config AND legacy kwargs
-        Server(params, cfg, ServingConfig(), n_slots=2)
-    with pytest.raises(TypeError):   # unknown kwarg stays loud
-        Server(params, cfg, slots=2)
