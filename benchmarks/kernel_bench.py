@@ -37,6 +37,16 @@ accepted length, and the accept-length histogram; asserts the two legs
 emit bit-identical tokens (the greedy-parity invariant the soak tests
 pin).
 
+Schema v7 adds the ENERGY-PARETO row: the mixed-precision autotuner
+(analysis.precision_search) searches per-call-site (ADC levels, scheme,
+per-channel) overrides on the calibration tree and reports serving
+energy/token — uniform 4b×4b BP at native ADC resolution vs the searched
+mixed manifest — plus the accuracy-proxy delta (held-out logit KL vs the
+float reference, uniform vs mixed). The bench-smoke CI job gates the
+mixed-precision energy win ≥ 1.3x at iso-proxy and uploads the manifest
+(`--precision-manifest`, consumed by serve.py / ServingConfig) as an
+artifact.
+
 CLI (the CI bench-smoke job):
     PYTHONPATH=src python -m benchmarks.kernel_bench --small \\
         --autotune --json-out BENCH_ci.json
@@ -58,10 +68,10 @@ from repro.kernels.ref import cim_mvm_ref
 
 from .common import row, timeit
 
-BENCH_SCHEMA = "pico-ram/kernel_bench/v6"  # v6: + spec-decode serving
+BENCH_SCHEMA = "pico-ram/kernel_bench/v7"  # v7: + energy-pareto row
 
 
-def run(small: bool = False):
+def run(small: bool = False, precision_manifest: str | None = None):
     out = []
     cfg = MacroConfig()
     key = jax.random.PRNGKey(0)
@@ -89,7 +99,54 @@ def run(small: bool = False):
     out += run_serving_sweep(small)
     out += run_shared_prefix_sweep(small)
     out += run_spec_decode_sweep(small)
+    out += run_energy_pareto(small, manifest_out=precision_manifest)
     return out
+
+
+def run_energy_pareto(small: bool = False,
+                      manifest_out: str | None = None):
+    """Mixed-precision serving energy: uniform vs the searched manifest.
+
+    Runs the full autotuner loop on the LM smoke (calibration tree →
+    greedy per-site (ADC levels, scheme, per-channel) descent under the
+    SQNR screen + held-out logit-KL budget) and reports the Eq. 4 serving
+    energy/token of the uniform native-resolution baseline against the
+    mixed config, at iso-accuracy-proxy (both KLs vs the FLOAT reference
+    in the derived field — the mixed config may drift at most kl_budget
+    beyond uniform). The search is fully deterministic (fixed seed), so
+    this row is a stable trend like every other bench row. The winning
+    manifest — the deployment artifact ServingConfig(precision_manifest=)
+    consumes — is written to `manifest_out`.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.analysis import precision_search as ps
+    from repro.configs.registry import SMOKES
+    from repro.core.cim_matmul import CIMConfig
+    from repro.models import registry as model_registry
+
+    cfg = SMOKES["internlm2-1.8b"].replace(dtype="float32",
+                                           cim=CIMConfig(enabled=True))
+    params = model_registry.init_params(jax.random.PRNGKey(0), cfg,
+                                        max_seq=64)
+    cal = np.random.RandomState(7).randint(0, cfg.vocab, size=(2, 16))
+    t0 = time.perf_counter()
+    man = ps.search(params, cal, cfg, seed=0)
+    search_us = (time.perf_counter() - t0) * 1e6
+    if manifest_out:
+        ps.save_manifest(manifest_out, man)
+    m = man["metrics"]
+    levels = ";".join(f"{k}:{v['adc_levels']}"
+                      for k, v in man["sites"].items())
+    return [row(
+        "energy_pareto_mixed_precision", search_us,
+        f"uniform_pj_tok={m['uniform_pj_per_token']:.1f}|"
+        f"mixed_pj_tok={m['mixed_pj_per_token']:.1f}|"
+        f"energy_win={m['energy_win']:.3f}x|"
+        f"kl_uniform={m['kl_uniform']:.4f}|kl_mixed={m['kl_proxy']:.4f}|"
+        f"kl_budget={m['kl_budget']:.3f}|levels={levels}")]
 
 
 def run_paged_attention_sweep(small: bool = False):
@@ -558,8 +615,14 @@ def main(argv=None) -> None:
                     metavar="PATH",
                     help="where --autotune writes the tuning cache "
                          "(consumed via $REPRO_TUNE_CACHE)")
+    ap.add_argument("--precision-manifest", default="precision_manifest.json",
+                    metavar="PATH", dest="precision_manifest",
+                    help="where the energy-pareto sweep writes the winning "
+                         "mixed-precision deployment manifest (consumed by "
+                         "serve.py --precision-manifest / "
+                         "ServingConfig(precision_manifest=...))")
     args = ap.parse_args(argv)
-    rows = run(small=args.small)
+    rows = run(small=args.small, precision_manifest=args.precision_manifest)
     if args.autotune:
         tuned_rows, entries = run_autotune(small=args.small)
         rows += tuned_rows

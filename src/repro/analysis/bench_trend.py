@@ -48,7 +48,14 @@ Tracked columns (parsed from the bench rows; missing rows render as "—"):
     decode tok/s on the paged engine with the ngram drafter (warm-timed
     legs, bit-identical outputs asserted in the bench) — the speedup the
     bench-smoke job gates at ≥ 1.5×, plus the mean accepted length per
-    verify step (1 + accepted drafts, the number the speedup is made of).
+    verify step (1 + accepted drafts, the number the speedup is made of);
+  * (schema v7) the energy-pareto row: serving energy/token (Eq. 4 over
+    the calibration traffic profile) of uniform 4b×4b BP at native ADC
+    resolution vs the searched per-site mixed-precision manifest, the
+    ×-energy win the bench-smoke job gates at ≥ 1.3×, and the
+    accuracy-proxy delta (held-out logit KL vs float: mixed − uniform,
+    bounded by the search's kl_budget) — deterministic model numbers,
+    platform-free.
 """
 from __future__ import annotations
 
@@ -137,6 +144,19 @@ def extract_metrics(doc: dict) -> dict:
             ml = re.search(r"mean_accept_len=([\d.]+)", derived)
             if ml:
                 out["spec_accept_len"] = float(ml.group(1))
+        if name.startswith("energy_pareto"):
+            ep = re.search(
+                r"uniform_pj_tok=([\d.]+)\|mixed_pj_tok=([\d.]+)\|"
+                r"energy_win=([\d.]+)x", derived)
+            if ep:
+                out["uniform_pj_tok"] = float(ep.group(1))
+                out["mixed_pj_tok"] = float(ep.group(2))
+                out["energy_win"] = float(ep.group(3))
+            kd = re.search(r"kl_uniform=([\d.]+)\|kl_mixed=([\d.]+)",
+                           derived)
+            if kd:
+                out["energy_kl_delta"] = float(kd.group(2)) \
+                    - float(kd.group(1))
         if name.startswith("serve_kv_bytes_occ25"):
             kb = re.search(
                 r"kv_bytes\s+slot=(\d+)\s+paged=(\d+)\s+\(([\d.]+)x", derived)
@@ -190,9 +210,9 @@ def render_markdown(entries: list[dict]) -> str:
         "fused σ ratio | fused noisy µs | serve tok/s | attn-kernel tok/s | "
         "paged KV B @25% | vs slot | score B (kernel) | vs exact | "
         "tuned speedup | prefix lanes | prefill tok saved | spec speedup | "
-        "accept len |",
+        "accept len | mixed pJ/tok | energy win | ΔKL proxy |",
         "|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---|---"
-        "|---|",
+        "|---|---|---|---|",
     ]
     for e in entries:
         m = e.get("metrics", {})
@@ -203,7 +223,7 @@ def render_markdown(entries: list[dict]) -> str:
                             f"({m.get('prefix_win', 0):.1f}×)")
         lines.append(
             "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} | {} "
-            "| {} | {} | {} | {} | {} |"
+            "| {} | {} | {} | {} | {} | {} | {} | {} |"
             .format(
                 str(e.get("label", "?"))[:24],
                 _fmt(m.get("decode_tok_s"), "{:.0f}"),
@@ -222,6 +242,9 @@ def render_markdown(entries: list[dict]) -> str:
                 _fmt(m.get("prefix_tok_saved"), "{:d}"),
                 _fmt(m.get("spec_speedup"), "{:.2f}×"),
                 _fmt(m.get("spec_accept_len"), "{:.2f}"),
+                _fmt(m.get("mixed_pj_tok"), "{:.0f}"),
+                _fmt(m.get("energy_win"), "{:.2f}×"),
+                _fmt(m.get("energy_kl_delta"), "{:+.4f}"),
             ))
     shapes = {e.get("metrics", {}).get("decode_shape") for e in entries}
     shapes.discard(None)
@@ -233,6 +256,46 @@ def render_markdown(entries: list[dict]) -> str:
         lines += ["", "score-tensor probe window(s): "
                   + ", ".join(str(w) for w in sorted(windows))]
     lines.append("")
+    return "\n".join(lines)
+
+
+def render_pareto_markdown(manifest: dict) -> str:
+    """Energy/accuracy Pareto section from a precision-search manifest —
+    the deployment artifact `serve.py --precision-manifest` consumes, so
+    the table describes exactly what `ServingConfig` dispatches."""
+    from repro.analysis.precision_search import pareto_points
+    m = manifest["metrics"]
+    pts = pareto_points(manifest)
+    win = m["energy_win"]
+    lines = [
+        "## Energy/accuracy Pareto (mixed analog precision)",
+        "",
+        f"Per-site precision manifest (schema `{manifest['schema']}`, "
+        f"arch `{manifest['arch']}`, seed {manifest['seed']}) served "
+        "through `ServingConfig(precision_manifest=…)` → "
+        "`CIMConfig.site_overrides`. Energy is Eq. 4 over the calibration "
+        "traffic profile; the accuracy proxy is held-out logit KL to the "
+        f"float model (budget {m['kl_budget']} over the uniform config).",
+        "",
+        "| config | pJ/token | vs uniform | KL vs float |",
+        "|---|---|---|---|",
+    ]
+    base = pts[0]["pj_per_token"]
+    for p in pts:
+        lines.append("| {} | {:.1f} | {:.3f}× | {:.4f} |".format(
+            p["config"], p["pj_per_token"],
+            base / max(p["pj_per_token"], 1e-30), p["kl"]))
+    sites = ", ".join(
+        f"{name}={e['adc_levels']}" for name, e in
+        sorted(manifest["sites"].items()))
+    lines += [
+        "",
+        f"mixed config: {win:.3f}× lower energy/token "
+        f"({(1 - 1 / win) * 100:.1f} % saved) at iso-accuracy-proxy.",
+        "",
+        f"per-site ADC levels: {sites}",
+        "",
+    ]
     return "\n".join(lines)
 
 
@@ -251,6 +314,10 @@ def main(argv=None) -> int:
                     help="markdown report path")
     ap.add_argument("--max-entries", type=int, default=200,
                     help="keep only the newest N history entries")
+    ap.add_argument("--precision-manifest", default=None, metavar="JSON",
+                    dest="precision_manifest",
+                    help="append the energy/accuracy Pareto section "
+                         "rendered from this precision-search manifest")
     args = ap.parse_args(argv)
 
     if bool(args.history) != bool(args.append) and not args.bench:
@@ -267,6 +334,11 @@ def main(argv=None) -> int:
     if not entries:
         ap.error("nothing to render: pass bench files or --history/--append")
     md = render_markdown(entries)
+    if args.precision_manifest:
+        from repro.analysis.precision_search import load_manifest
+        manifest = load_manifest(args.precision_manifest)
+        if manifest is not None:
+            md += "\n" + render_pareto_markdown(manifest)
     with open(args.out, "w") as f:
         f.write(md)
     print(f"wrote {args.out} ({len(entries)} run(s))")

@@ -17,12 +17,26 @@ This module is the calibration half of that fix:
 
 `collect_act_spans` runs one EAGER forward (layer scan unrolled so values
 are concrete) with a recorder hooked into core.quant.act_scale and returns
-the per-matmul activation spans in call order — one entry per CIM-routed
-matmul, i.e. the per-layer amax profile. `calibrate_act_scale` reduces the
-profile to a single static scale (max span / qmax, optionally a percentile
-over call sites) — one fixed DAC grid for the whole model, matching the
-macro's single analog reference. Per-call-site static scales are a
-follow-up (they need per-layer plumbing through the params tree).
+the per-matmul activation spans in call order — `quant.SpanRecord` entries
+(floats carrying the call-site name, the signed range [lo, hi] and the
+(k, m, rows) shape metadata) — one entry per CIM-routed matmul.
+
+Two reductions of that profile:
+
+* `calibrate_act_scale` — ONE static (scale, zero_point) grid for the whole
+  model (max span / qmax, optionally a percentile over call sites; the
+  zero point covers the profile's most negative tail). The grids are PAIRS
+  now: the recorder measures span = max − min(·, 0), so a zero-pinned
+  static grid both wasted range above the data and clipped the negative
+  tail the span accounted for — the calibrated zp closes that grid
+  mismatch (exact digital fold via schemes.signed_correction).
+* `calibrate_act_tree` — the PER-CALL-SITE calibration tree: one
+  (scale, zero_point) + range/shape entry per site name ("wq", "w_up",
+  "e_gate", "head", ...). Site names deliberately exclude the layer index
+  (layers share weight names), so the tree is identical between scanned
+  and unrolled layer configs and each site resolves one constant grid even
+  when all layers share a single lax.scan trace. This is the profile the
+  mixed-precision autotuner (analysis.precision_search) searches over.
 """
 from __future__ import annotations
 
@@ -48,9 +62,11 @@ def _calibration_cfg(cfg):
     return cfg.replace(cim=cim, scan_layers=False)
 
 
-def collect_act_spans(params, tokens, cfg, *, mod=None) -> list[float]:
+def collect_act_spans(params, tokens, cfg, *, mod=None) -> list:
     """Per-matmul activation spans (max − min(·, 0)), in call order, over
-    one eager forward of `tokens` [B, T] int32."""
+    one eager forward of `tokens` [B, T] int32. Entries are
+    `quant.SpanRecord` (float subclass): plain span arithmetic keeps
+    working, and each record carries (site, lo, hi, k, m, rows)."""
     if mod is None:
         from repro.models import registry
         mod = registry.get_module(cfg)
@@ -64,14 +80,25 @@ def collect_act_spans(params, tokens, cfg, *, mod=None) -> list[float]:
     return spans
 
 
+def _grid(lo: float, span: float, qmax: int) -> tuple[float, float]:
+    """(scale, zero_point) covering [min(lo, 0), min(lo, 0) + span]."""
+    scale = span / qmax
+    zp = float(round(min(max(-min(lo, 0.0) / scale, 0.0), float(qmax))))
+    return scale, zp
+
+
 def calibrate_act_scale(params, tokens, cfg, *, percentile: float = 1.0,
                         mod=None) -> dict:
-    """One static DAC scale from a calibration batch.
+    """One static DAC grid from a calibration batch.
 
     percentile < 1.0 drops the hottest call sites from the max (the VTC
     gain trade of Fig. 15: a tighter grid at the cost of clipping their
-    tails). Returns {"scale", "spans", "span", "qmax"}; feed "scale" to
-    ServingConfig(act_scale=...) / ActQuantConfig.static_scale.
+    tails). Returns {"scale", "zero_point", "spans", "span", "qmax"}; feed
+    (scale, zero_point) to ServingConfig(act_scale=..., act_zero_point=...)
+    / ActQuantConfig(static_scale=..., static_zero_point=...). The zero
+    point covers the profile's most negative activation tail — span is
+    measured as max − min(·, 0), so a grid without it clips exactly the
+    range the calibrated scale reserved.
     """
     if not 0.0 < percentile <= 1.0:
         raise ValueError(f"percentile must be in (0, 1], got {percentile}")
@@ -80,5 +107,52 @@ def calibrate_act_scale(params, tokens, cfg, *, percentile: float = 1.0,
     idx = max(0, math.ceil(percentile * len(ordered)) - 1)
     span = ordered[idx]
     qmax = cfg.cim.act.qmax
-    return {"scale": span / qmax, "span": span, "spans": spans,
+    lo = min((r.lo for r in spans), default=0.0)
+    scale, zp = _grid(lo, float(span), qmax)
+    return {"scale": scale, "zero_point": zp, "span": span, "spans": spans,
+            "qmax": qmax}
+
+
+def calibrate_act_tree(params, tokens, cfg, *, percentile: float = 1.0,
+                       mod=None) -> dict:
+    """Per-call-site calibration tree from one eager calibration forward.
+
+    Aggregates the span profile BY SITE NAME (layer-index-free, so scanned
+    and unrolled configs yield the identical tree): per site, the range is
+    the min/percentile-max envelope over every call that hit the site
+    (layers × chunks × experts), reduced to a static (scale, zero_point)
+    grid plus the shape/traffic metadata (k, m, rows, calls) the precision
+    autotuner's energy accounting consumes.
+
+    Returns {"sites": {name: {"scale", "zero_point", "lo", "hi", "span",
+    "k", "m", "rows", "calls"}}, "default": the whole-model grid,
+    "qmax": ...} with sites ordered by first appearance (call order).
+    """
+    if not 0.0 < percentile <= 1.0:
+        raise ValueError(f"percentile must be in (0, 1], got {percentile}")
+    spans = collect_act_spans(params, tokens, cfg, mod=mod)
+    qmax = cfg.cim.act.qmax
+    by_site: dict[str, list] = {}
+    for r in spans:
+        by_site.setdefault(r.site or "<unnamed>", []).append(r)
+    sites = {}
+    for name, recs in by_site.items():
+        ordered = sorted(float(r) for r in recs)
+        idx = max(0, math.ceil(percentile * len(ordered)) - 1)
+        span = ordered[idx]
+        lo = min(r.lo for r in recs)
+        scale, zp = _grid(lo, span, qmax)
+        sites[name] = {
+            "scale": scale, "zero_point": zp, "lo": lo,
+            "hi": max(r.hi for r in recs), "span": span,
+            "k": max(r.k for r in recs),
+            "m": max((r.m for r in recs if r.m is not None), default=None),
+            "rows": sum(r.rows for r in recs), "calls": len(recs)}
+    lo_all = min(r.lo for r in spans)
+    ordered = sorted(spans)
+    idx = max(0, math.ceil(percentile * len(ordered)) - 1)
+    scale, zp = _grid(lo_all, float(ordered[idx]), qmax)
+    return {"sites": sites,
+            "default": {"scale": scale, "zero_point": zp,
+                        "span": float(ordered[idx]), "lo": lo_all},
             "qmax": qmax}

@@ -30,9 +30,49 @@ import jax
 import jax.numpy as jnp
 
 from .engine import PackedCodes, execute_mvm
-from .macro import MacroConfig
+from .macro import MacroConfig, Scheme
 from .quant import (ActQuantConfig, WeightQuantConfig, act_scale,
-                    quantize_act, quantize_weight, weight_scale)
+                    annotate_recorded_shape, current_site, quantize_act,
+                    quantize_weight, recording_active, weight_scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePrecision:
+    """Per-call-site precision override (one entry of a mixed-precision
+    deployment manifest, analysis.precision_search).
+
+    Hashable and frozen so it can ride CIMConfig — itself a jit static arg —
+    inside the `site_overrides` tuple. Every field is optional; None keeps
+    the uniform base config's value. Applied at trace time by
+    `resolve_site_cfg` against the `quant.act_site` scope the models push
+    (layer-index-free weight names), so under `scan_layers=True` — where all
+    layers share one trace — each site still resolves a single constant
+    config.
+    """
+
+    act_scale: float | None = None     # static DAC grid scale
+    act_zero_point: float | None = None
+    adc_levels: int | None = None      # per-site ADC resolution (energy knob)
+    scheme: str | None = None          # "bp" | "wbs" | "bs" (macro.Scheme)
+    per_channel: bool | None = None    # per-output-channel weight scales
+
+    def apply(self, cfg: "CIMConfig") -> "CIMConfig":
+        macro, act, weight = cfg.macro, cfg.act, cfg.weight
+        if self.adc_levels is not None:
+            macro = dataclasses.replace(macro, adc_levels=self.adc_levels)
+        if self.scheme is not None:
+            macro = dataclasses.replace(macro, scheme=Scheme(self.scheme))
+        if self.act_scale is not None:
+            act = dataclasses.replace(
+                act, static_scale=self.act_scale,
+                static_zero_point=self.act_zero_point or 0.0)
+        elif self.act_zero_point is not None:
+            act = dataclasses.replace(act,
+                                      static_zero_point=self.act_zero_point)
+        if self.per_channel is not None:
+            weight = dataclasses.replace(weight,
+                                         per_channel=self.per_channel)
+        return dataclasses.replace(cfg, macro=macro, act=act, weight=weight)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,10 +97,38 @@ class CIMConfig:
     backend: Literal["auto", "einsum", "scan", "pallas", "pallas_packed",
                      "pallas_noisy", "pallas_noisy_packed"] = "auto"
     noise_seed: int | None = None
+    # Mixed-precision deployment tree: ((site_name, SitePrecision), ...) —
+    # a tuple-of-pairs (not a dict) so the config stays hashable for jit
+    # static args. Resolved per matmul by resolve_site_cfg against the
+    # quant.act_site scope; sites without an entry run the uniform base
+    # config. Populated from a precision manifest
+    # (analysis.precision_search / ServingConfig.precision_manifest).
+    site_overrides: tuple = ()
 
     def with_scheme(self, scheme) -> "CIMConfig":
         return dataclasses.replace(
             self, macro=dataclasses.replace(self.macro, scheme=scheme))
+
+    def for_site(self, site: str | None) -> "CIMConfig":
+        """The effective config at a named call site (uniform base when the
+        site has no override or is unnamed)."""
+        if site is not None:
+            for name, ov in self.site_overrides:
+                if name == site:
+                    return ov.apply(
+                        dataclasses.replace(self, site_overrides=()))
+        return dataclasses.replace(self, site_overrides=()) \
+            if self.site_overrides else self
+
+
+def resolve_site_cfg(cfg: CIMConfig) -> CIMConfig:
+    """Per-site override resolution at the quantization entry points: maps
+    the enclosing quant.act_site scope through cfg.site_overrides. Runs at
+    trace time (the site stack is Python-level), so each call site bakes
+    its own constant (levels, scheme, grid) into the jit graph."""
+    if not cfg.site_overrides:
+        return cfg
+    return cfg.for_site(current_site())
 
 
 OFF = CIMConfig(enabled=False)
@@ -75,7 +143,10 @@ def cim_matmul(x: jax.Array, w: jax.Array, cfg: CIMConfig, *,
     """
     if not cfg.enabled:
         return jnp.einsum("...k,km->...m", x, w)
+    cfg = resolve_site_cfg(cfg)
     s_x = act_scale(x, cfg.act)
+    if recording_active():
+        annotate_recorded_shape(w.shape[-1])
     x_codes, zp = quantize_act(x, s_x, cfg.act)
     s_w = weight_scale(w, cfg.weight)
     w_codes = quantize_weight(w, s_w, cfg.weight)
@@ -100,6 +171,7 @@ def cim_matmul_prequant(x: jax.Array, w_codes, w_scale: jax.Array | None,
     w_scale is per-matrix or per-output-channel ([..., 1, M], from
     `quantize_weight_offline` under cfg.weight.per_channel).
     """
+    cfg = resolve_site_cfg(cfg)
     s_x = act_scale(x, cfg.act)
     x_codes, zp = quantize_act(x, s_x, cfg.act)
     if isinstance(w_codes, PackedCodes):
@@ -128,6 +200,8 @@ def quantize_weight_offline(w: jax.Array, cfg: CIMConfig):
     `kernels.ops.pack_codes` for the nibble-packed serving format.
     """
     wf = w.astype(jnp.float32)
+    cfg = resolve_site_cfg(cfg)   # per-site per_channel (models.quantize
+    #                               pushes the weight name as the site)
     axes = (-2,) if cfg.weight.per_channel else (-2, -1)
     amax = jnp.max(jnp.abs(wf), axis=axes, keepdims=True)
     s_w = jnp.maximum(amax, 1e-8) / cfg.weight.qmax

@@ -20,7 +20,9 @@ from __future__ import annotations
 
 import dataclasses
 
-from .macro import GEOMETRY, MacroConfig, Scheme
+from .adc import (ADC_RATIO_E_ADC_OVER_N_E_MAC, ADC_RATIO_LEVELS,
+                  DUAL_THRESHOLD_GATING)
+from .macro import GEOMETRY, MacroConfig, OperatingPoint, Scheme
 
 VOLT_REF = 0.65
 # Fitted so that, with the ADC level de-rating at 0.65 V (362 → 256 levels,
@@ -38,13 +40,20 @@ def _solve_e_mac_ref() -> float:
 
     One BP group MVM: K = N = 144, ops = 2·N (MAC = 2 ops, 4b×4b counting):
         E_group = E_ADC + B_W·N·E_MAC,
-        E_ADC   = 3.0·144·E_MAC · (256/128) · 0.442   (Eq. 4 ratio anchor at
-                  7-bit, scaled to the 256 effective levels at 0.65 V, with
-                  dual-threshold gating)
+        E_ADC   = ratio·N·E_MAC · (levels(0.65 V)/128) · (1 − gating)
         TOPS/W  = 2·144 / E_group = 40.2e12.
+
+    Every ADC-side term is DERIVED from core.adc's measured constants and
+    the macro's own level de-rating (362 → 256 effective levels at 0.65 V,
+    macro.effective_adc_levels) — the single-source-of-truth contract the
+    autotuner's (levels, vdd) sweep relies on: adc_energy_j and this anchor
+    can no longer drift apart.
     """
-    n = 144
-    adc_factor = 3.0 * n * (256.0 / 128.0) * (1.0 - 0.558)
+    n = MacroConfig().n_rows
+    levels_ref = MacroConfig(
+        op=OperatingPoint(vdd=VOLT_REF)).effective_adc_levels()
+    adc_factor = ADC_RATIO_E_ADC_OVER_N_E_MAC * n \
+        * (levels_ref / ADC_RATIO_LEVELS) * (1.0 - DUAL_THRESHOLD_GATING)
     ops = 2.0 * n
     e_group_target = ops / 40.2e12
     return e_group_target / (adc_factor + 4.0 * n)

@@ -19,6 +19,31 @@ from .macro import MacroConfig
 from .schemes import bp_mvm, signed_correction
 
 
+def adc_levels_for_bits(bits: float) -> int:
+    """ADC quantization levels for a (possibly fractional) bit count.
+
+    The paper's TD-ADC is 8.5-bit / 362-level (2^8.5 ≈ 362.04); the
+    mixed-precision autotuner enumerates its per-site resolution candidates
+    on this bit axis, since TD-ADC energy scales ~linearly with LEVELS
+    (Walden), i.e. exponentially with bits — the knob that buys the
+    per-layer energy/accuracy trade.
+    """
+    return max(2, int(round(2.0 ** bits)))
+
+
+def adc_bits_for_levels(levels: int) -> float:
+    """Inverse of adc_levels_for_bits (exact log2)."""
+    import math
+    return math.log2(levels)
+
+
+# Candidate ADC resolutions for the per-site precision search: the native
+# 8.5-bit converter and progressively coarser settings down to 5 bits (below
+# that, BP partial sums at N = 144 rows are quantization-dominated for every
+# layer shape we serve — see core.sqnr's Fig. 2 sweep).
+ADC_BIT_CANDIDATES = (8.5, 8.0, 7.5, 7.0, 6.5, 6.0, 5.5, 5.0)
+
+
 def split_nibbles(codes: jax.Array):
     """8-bit unsigned codes → (hi, lo) 4-bit nibbles."""
     ci = codes.astype(jnp.int32)

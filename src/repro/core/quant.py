@@ -56,6 +56,15 @@ class ActQuantConfig:
     # shares the serving batch — the batch-composition decoupling the
     # runtime.server docstring tracks. None = dynamic per-tensor range.
     static_scale: float | None = None
+    # Calibrated zero point for the static grid (analysis.calibrate emits
+    # (scale, zero_point) PAIRS): q = clip(round(x/s) + zp, 0, qmax), folded
+    # exactly into the digital correction like Eq. 7's weight offset
+    # (schemes.signed_correction). 0 (default) keeps the unsigned
+    # post-ReLU grid; a calibrated zp > 0 shifts the grid to cover a signed
+    # activation's negative tail instead of clipping it — the static/dynamic
+    # grid-mismatch fix (the recorder measures span = max − min(·,0), so a
+    # zp-less static grid wasted range on values it then clipped).
+    static_zero_point: float = 0.0
 
     @property
     def qmax(self) -> int:
@@ -82,18 +91,82 @@ class WeightQuantConfig:
         return 1 << (self.bits - 1)
 
 
+class SpanRecord(float):
+    """One recorded activation-range observation: a float (the span,
+    max − min(·, 0) — so existing span-list consumers keep working) carrying
+    the call-site identity and range/shape metadata the per-site calibration
+    tree and the precision autotuner's energy accounting need.
+
+    `site` is the weight name of the enclosing matmul (`act_site` scope) —
+    deliberately EXCLUDING the layer index, so the calibration tree keyed on
+    it is identical whether the model later runs scanned (one shared trace
+    for all layers) or unrolled. `m` (output columns) is attached by
+    cim_matmul once the weight shape is known; None when act_scale was
+    called outside a matmul.
+    """
+
+    site: str | None
+    lo: float
+    hi: float
+    k: int
+    rows: int
+    m: int | None
+
+    def __new__(cls, span: float, *, site=None, lo=0.0, hi=0.0, k=0,
+                rows=0, m=None):
+        self = super().__new__(cls, span)
+        self.site = site
+        self.lo = lo
+        self.hi = hi
+        self.k = k
+        self.rows = rows
+        self.m = m
+        return self
+
+
+# Call-site identity: models wrap each CIM-routed matmul in an `act_site`
+# scope named after the weight ("wq", "w_up", "e_gate", "head", ...). The
+# stack is Python-level, so it works identically in eager calibration and at
+# trace time (where cim_matmul resolves per-site precision overrides).
+_SITE_STACK: list[str] = []
+
+
+@contextlib.contextmanager
+def act_site(name: str):
+    """Name the enclosing CIM call site (layer-index-free weight name)."""
+    _SITE_STACK.append(name)
+    try:
+        yield
+    finally:
+        _SITE_STACK.pop()
+
+
+def current_site() -> str | None:
+    return _SITE_STACK[-1] if _SITE_STACK else None
+
+
 # Calibration hook: while a `record_act_spans()` context is open (eager
-# forwards only — traced spans are skipped), act_scale appends every
-# activation span it computes, in call order. analysis.calibrate turns the
-# recording into a static scale for ActQuantConfig.static_scale.
+# forwards only — a traced span raises, see act_scale), act_scale appends
+# every activation span it computes, in call order, as a SpanRecord.
+# analysis.calibrate turns the recording into static (scale, zero_point)
+# grids for ActQuantConfig.
 _SPAN_RECORDER: list[list] = []
+
+
+def recording_active() -> bool:
+    """True while any record_act_spans() context is open — model code uses
+    this to switch vmapped expert matmuls to an eager unroll so their spans
+    are concrete (vmap tracers would otherwise make MoE calibration blind
+    to expert call sites)."""
+    return bool(_SPAN_RECORDER)
 
 
 @contextlib.contextmanager
 def record_act_spans():
     """Collect per-matmul activation spans (max − min(·, 0)) during eager
-    forwards; yields the list being filled."""
-    spans: list[float] = []
+    forwards; yields the list being filled (SpanRecord entries — floats
+    carrying site/range/shape metadata)."""
+    spans: list[SpanRecord] = []
     _SPAN_RECORDER.append(spans)
     try:
         yield spans
@@ -118,11 +191,40 @@ def act_scale(x: jax.Array, cfg: ActQuantConfig) -> jax.Array:
     if cfg.static_scale is not None:
         return jnp.asarray(cfg.static_scale, jnp.float32)
     xs = jax.lax.stop_gradient(x)
-    span = jnp.maximum(jnp.max(xs) - jnp.minimum(jnp.min(xs), 0.0), 1e-8)
-    if _SPAN_RECORDER and not isinstance(span, jax.core.Tracer):
+    lo = jnp.minimum(jnp.min(xs), 0.0)
+    hi = jnp.max(xs)
+    span = jnp.maximum(hi - lo, 1e-8)
+    if _SPAN_RECORDER:
+        if isinstance(span, jax.core.Tracer):
+            # Fail LOUDLY: a silently skipped tracer span used to leave
+            # whole call sites (vmapped MoE experts, scanned layers) out of
+            # the calibration profile — a profile that looks complete but
+            # isn't. Calibration forwards must run eager (scan unrolled,
+            # recording_active()-gated expert unroll, no jit/vmap around
+            # the forward).
+            raise RuntimeError(
+                "act_scale saw a traced activation while a span recorder "
+                "is open — this call site would be silently missing from "
+                "the calibration profile. Run the calibration forward "
+                "eagerly (analysis.calibrate unrolls layer scans and MoE "
+                "experts; do not wrap it in jit/vmap/scan).")
+        rec_entry = SpanRecord(
+            float(span), site=current_site(), lo=float(lo), hi=float(hi),
+            k=int(x.shape[-1]) if x.ndim else 1,
+            rows=int(x.size // x.shape[-1]) if x.ndim else 1)
         for rec in _SPAN_RECORDER:
-            rec.append(float(span))
+            rec.append(rec_entry)
     return span / cfg.qmax
+
+
+def annotate_recorded_shape(m: int) -> None:
+    """Attach the matmul's output-column count to the most recent span
+    record (called by cim_matmul, which — unlike act_scale — sees the
+    weight). The autotuner's per-site energy accounting needs (k, m, rows)
+    per call."""
+    for rec in _SPAN_RECORDER:
+        if rec and rec[-1].m is None:
+            rec[-1].m = int(m)
 
 
 def weight_scale(w: jax.Array, cfg: WeightQuantConfig) -> jax.Array:
@@ -142,13 +244,14 @@ def quantize_act(x: jax.Array, scale: jax.Array, cfg: ActQuantConfig):
     into the digital correction path exactly like Eq. 7's weight offset — see
     `schemes.signed_correction`. For non-negative x (post-ReLU, the paper's
     case) z = 0 and this reduces to the paper's unsigned DAC codes. Under a
-    static calibrated scale the zero point is pinned at 0 too (the DAC grid
-    must not depend on the batch; negative tails clip, as on the hardware's
-    unsigned C-DAC inputs).
+    static calibrated grid BOTH the scale and the zero point are fixed
+    constants from calibration (the DAC grid must not depend on the batch):
+    zp = 0 keeps the unsigned grid, a calibrated zp > 0 covers the measured
+    negative tail that a zero-pinned grid would clip.
     """
     if cfg.static_scale is not None:
-        zp = jnp.zeros((), jnp.float32)
-        q = clip_ste(round_ste(x / scale), 0.0, float(cfg.qmax))
+        zp = jnp.asarray(float(cfg.static_zero_point), jnp.float32)
+        q = clip_ste(round_ste(x / scale) + zp, 0.0, float(cfg.qmax))
         return q, zp
     zp = jnp.round(jnp.clip(-jnp.min(jax.lax.stop_gradient(x)) / scale, 0, cfg.qmax))
     q = clip_ste(round_ste(x / scale) + zp, 0.0, float(cfg.qmax))

@@ -32,6 +32,14 @@
       --paged --drafter ngram --spec-k 4 [--temperature 0.8 --top-k 40] \
       [--trie-watermark 0.5]
 
+  # per-site mixed analog precision: apply a precision_search deployment
+  # manifest (from `kernel_bench --precision-manifest` or
+  # analysis.precision_search.save_manifest) through CIMConfig
+  # site_overrides; a missing/malformed/stale manifest warns and serves
+  # uniform defaults
+  PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
+      --paged --cim bp --precision-manifest precision_manifest.json
+
   REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host [--paged]
       # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
@@ -149,6 +157,14 @@ def main():
                          "(analysis.calibrate amax sweep over a synthetic "
                          "batch) so each lane's CIM quantization is "
                          "independent of batch composition; needs --cim")
+    ap.add_argument("--precision-manifest", default=None, metavar="PATH",
+                    dest="precision_manifest",
+                    help="mixed-precision deployment manifest "
+                         "(analysis.precision_search JSON): installs "
+                         "per-call-site (static grid, ADC levels, scheme, "
+                         "per-channel) overrides into the CIM config; a "
+                         "missing/malformed/stale file warns and serves "
+                         "uniform defaults; needs --cim")
     ap.add_argument("--cim", choices=("off", "bp", "bp-noisy", "bp-prequant"),
                     default="off",
                     help="bp-noisy = NOISY converter chain with "
@@ -200,7 +216,9 @@ def main():
         cfg = cfg.replace(cim=CIMConfig(enabled=True))
     params = registry.init_params(jax.random.PRNGKey(0), cfg,
                                   max_seq=args.max_len)
-    act_scale = None
+    if args.precision_manifest and args.cim == "off":
+        ap.error("--precision-manifest needs a --cim mode")
+    act_scale = act_zero_point = None
     if args.act_scale == "static":
         if args.cim == "off":
             ap.error("--act-scale static needs a --cim mode")
@@ -209,10 +227,13 @@ def main():
         cal_tokens = cal_rng.randint(0, cfg.vocab, size=(2, 16))
         cal = calibrate_act_scale(params, cal_tokens, cfg)
         act_scale = cal["scale"]
+        act_zero_point = cal["zero_point"]
         print(f"calibrated static act_scale={act_scale:.6f} "
+              f"zero_point={act_zero_point:.0f} "
               f"(max span {cal['span']:.4f} over {len(cal['spans'])} "
               f"matmul sites)")
-    serving = ServingConfig.from_flags(args, act_scale=act_scale)
+    serving = ServingConfig.from_flags(args, act_scale=act_scale,
+                                       act_zero_point=act_zero_point)
     server = Server(params, cfg, serving)
 
     rng = np.random.RandomState(0)

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import quant
 from repro.core.cim_matmul import cim_matmul, cim_matmul_ste
 from repro.parallel.sharding import constrain
 
@@ -90,6 +91,11 @@ def dense(p: Params, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
 
     CIM runs in f32 (integer-code arithmetic); the float path runs in the
     model compute dtype. Output is cast back to the compute dtype.
+
+    The CIM branches run inside a `quant.act_site(w)` scope: the weight name
+    (layer-index-free by construction — layers share names) is the call-site
+    identity the calibration profile records and per-site precision
+    overrides (CIMConfig.site_overrides) resolve against.
     """
     if cfg.cim.enabled and (w + "_q") in p:
         # serving path: offline-quantized stored codes — int8 containers or
@@ -99,12 +105,14 @@ def dense(p: Params, x: jax.Array, cfg: ModelConfig, *, train: bool = False,
         # cfg.cim.noise_seed routes NOISY/FULL evals to the fused
         # stochastic kernel with seeded-reproducible draws.
         from repro.core.cim_matmul import cim_matmul_prequant
-        y = cim_matmul_prequant(x.astype(jnp.float32), p[w + "_q"],
-                                p[w + "_scale"], cfg.cim)
+        with quant.act_site(w):
+            y = cim_matmul_prequant(x.astype(jnp.float32), p[w + "_q"],
+                                    p[w + "_scale"], cfg.cim)
         y = y.astype(dtype_of(cfg))
     elif cfg.cim.enabled:
         fn = cim_matmul_ste if train else cim_matmul
-        y = fn(x.astype(jnp.float32), p[w].astype(jnp.float32), cfg.cim)
+        with quant.act_site(w):
+            y = fn(x.astype(jnp.float32), p[w].astype(jnp.float32), cfg.cim)
         y = y.astype(dtype_of(cfg))
     else:
         y = jnp.einsum("...k,km->...m", x, p[w])
@@ -601,13 +609,16 @@ def unembed(p: Params, h: jax.Array, cfg: ModelConfig, *,
             train: bool = False) -> jax.Array:
     if cfg.cim.enabled and "head_q" in p:
         from repro.core.cim_matmul import cim_matmul_prequant
-        logits = cim_matmul_prequant(h.astype(jnp.float32), p["head_q"],
-                                     p["head_scale"], cfg.cim)
+        with quant.act_site("head"):
+            logits = cim_matmul_prequant(h.astype(jnp.float32), p["head_q"],
+                                         p["head_scale"], cfg.cim)
     else:
         w = p["embed"].T if cfg.tie_embeddings else p.get("head")
         if cfg.cim.enabled:
             fn = cim_matmul_ste if train else cim_matmul
-            logits = fn(h.astype(jnp.float32), w.astype(jnp.float32), cfg.cim)
+            with quant.act_site("head"):
+                logits = fn(h.astype(jnp.float32), w.astype(jnp.float32),
+                            cfg.cim)
         else:
             logits = jnp.einsum("...d,dv->...v", h, w)
     logits = logits.astype(jnp.float32)

@@ -50,13 +50,16 @@ def _mm(p, name: str, x, cfg: ModelConfig, train: bool):
     deployed on-chip-residence flow (§V-C: the whole GRU fits in 64 macros'
     SRAM). With cfg.cim.noise_seed set, NOISY/FULL gate MVMs run the fused
     stochastic kernel — the wake-word robustness study at kernel speed."""
+    from repro.core import quant
     if cfg.cim.enabled and name + "_q" in p:
         from repro.core.cim_matmul import cim_matmul_prequant
-        return cim_matmul_prequant(x, p[name + "_q"], p[name + "_scale"],
-                                   cfg.cim)
+        with quant.act_site(name):
+            return cim_matmul_prequant(x, p[name + "_q"], p[name + "_scale"],
+                                       cfg.cim)
     if cfg.cim.enabled:
         fn = cim_matmul_ste if train else cim_matmul
-        return fn(x, p[name], cfg.cim)
+        with quant.act_site(name):
+            return fn(x, p[name], cfg.cim)
     return x @ p[name]
 
 

@@ -157,8 +157,15 @@ def _expert_ffn(buf: jax.Array, wg, wu, wd, cfg: ModelConfig, train: bool):
 
     wg/wu/wd are _expert_weights dicts; the CIM path vmaps the engine's
     layer entry point over the expert axis (prequant stored codes or
-    quantize-on-the-fly float weights)."""
+    quantize-on-the-fly float weights). While a calibration span recorder is
+    open (quant.recording_active()) the expert axis is unrolled in Python
+    instead: under vmap every activation span is a tracer, which used to
+    leave ALL routed-expert call sites silently missing from the profile —
+    the unroll keeps spans concrete and records them under the e_gate /
+    e_up / e_down site names."""
     if cfg.cim.enabled:
+        from repro.core import quant
+
         def one(xb, wp):
             if "pk" in wp:   # nibble-packed container (carries its scales)
                 from repro.core.cim_matmul import cim_matmul_prequant
@@ -172,9 +179,18 @@ def _expert_ffn(buf: jax.Array, wg, wu, wd, cfg: ModelConfig, train: bool):
             return mm(xb.astype(jnp.float32), wp["w"].astype(jnp.float32),
                       cfg.cim)
 
-        f = jax.vmap(one)
-        h = jax.nn.silu(f(buf, wg)) * f(buf, wu)
-        return f(h, wd).astype(buf.dtype)
+        if quant.recording_active():
+            def f(xb, wp, site):
+                with quant.act_site(site):
+                    return jnp.stack([
+                        one(xb[e], jax.tree.map(lambda a: a[e], wp))
+                        for e in range(xb.shape[0])])
+        else:
+            def f(xb, wp, site):
+                with quant.act_site(site):
+                    return jax.vmap(one)(xb, wp)
+        h = jax.nn.silu(f(buf, wg, "e_gate")) * f(buf, wu, "e_up")
+        return f(h, wd, "e_down").astype(buf.dtype)
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg["w"])) \
         * jnp.einsum("ecd,edf->ecf", buf, wu["w"])
     return jnp.einsum("ecf,efd->ecd", h, wd["w"])

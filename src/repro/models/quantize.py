@@ -52,7 +52,12 @@ def quantize_params(params: dict, cfg: ModelConfig, *,
             if isinstance(v, dict):
                 out[k] = quantize_params(v, cfg, packed=packed)
             elif k in QUANTIZABLE and getattr(v, "ndim", 0) >= 2:
-                codes, scale = quantize_weight_offline(v, cfg.cim)
+                # the weight name is the call-site identity: per-site
+                # precision overrides (e.g. per-channel scales from a
+                # deployment manifest) apply at offline-quantization time
+                from repro.core import quant
+                with quant.act_site(k):
+                    codes, scale = quantize_weight_offline(v, cfg.cim)
                 if packed:
                     from repro.kernels.ops import pack_codes
                     codes = pack_codes(codes)

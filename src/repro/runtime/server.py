@@ -150,8 +150,13 @@ class ServingConfig:
     admission eagerness against preemption churn; 0 admits up to the last
     block). Weights: `prequant` re-encodes CIM-routed weights as stored
     codes (models.quantize), nibble-packed when `packed`. `attn` picks the
-    paged attention backend; `act_scale` pins a static calibrated
-    activation scale (analysis.calibrate) — needs cfg.cim.enabled.
+    paged attention backend; `act_scale` (+ optional `act_zero_point`) pins
+    a static calibrated activation grid (analysis.calibrate) — needs
+    cfg.cim.enabled. `precision_manifest` points at a mixed-precision
+    deployment manifest (analysis.precision_search): per-call-site
+    (grid, ADC levels, scheme, per-channel) overrides installed as
+    cfg.cim.site_overrides, with the tune-cache fallback discipline — a
+    missing/malformed/stale manifest warns and serves uniform defaults.
     Speculative decoding (paged only): `drafter` picks a proposer from the
     runtime.speculative registry ("off" / "ngram" / "model:<name>") and
     `spec_k` caps drafted tokens per lane per verify step. Trie capacity
@@ -172,6 +177,8 @@ class ServingConfig:
     token_budget: Optional[int] = None
     attn: str = "auto"
     act_scale: Optional[float] = None
+    act_zero_point: Optional[float] = None
+    precision_manifest: Optional[str] = None
     prefix_sharing: bool = True
     watermark: float = 1 / 16
     drafter: str = "off"
@@ -200,6 +207,9 @@ class ServingConfig:
         if self.spec_k < 1:
             raise ValueError("spec_k must be >= 1 (tokens drafted per "
                              "verify step)")
+        if self.act_zero_point is not None and self.act_scale is None:
+            raise ValueError("act_zero_point positions a static grid — it "
+                             "needs act_scale (the grid's step) set too")
         from repro.kernels.paged_attention import choose_attn_backend
         choose_attn_backend(self.attn)   # validate the name up front
         name, _ = parse_drafter(self.drafter)   # validate like attn
@@ -227,7 +237,8 @@ class ServingConfig:
                  ("token_budget", "token_budget"), ("attn", "attn"),
                  ("watermark", "watermark"), ("drafter", "drafter"),
                  ("spec_k", "spec_k"),
-                 ("trie_watermark", "trie_watermark")]
+                 ("trie_watermark", "trie_watermark"),
+                 ("precision_manifest", "precision_manifest")]
         for field, flag in pairs:
             v = getattr(args, flag, None)
             if v is not None:
@@ -339,7 +350,17 @@ class Server:
             assert cfg.cim.enabled, "static act_scale needs cim.enabled"
             cfg = cfg.replace(cim=dataclasses.replace(
                 cfg.cim, act=dataclasses.replace(
-                    cfg.cim.act, static_scale=float(serving.act_scale))))
+                    cfg.cim.act, static_scale=float(serving.act_scale),
+                    static_zero_point=float(serving.act_zero_point or 0.0))))
+        if serving.precision_manifest is not None:
+            assert cfg.cim.enabled, "precision manifest needs cim.enabled"
+            from repro.analysis.precision_search import apply_manifest, \
+                load_manifest
+            manifest = load_manifest(serving.precision_manifest,
+                                     arch=cfg.arch)
+            # None (missing/malformed/stale) falls through unchanged: the
+            # server comes up on uniform defaults, mirroring the tune cache
+            cfg = cfg.replace(cim=apply_manifest(cfg.cim, manifest))
         if serving.prequant:
             assert cfg.cim.enabled, "prequant serving needs cim.enabled"
             from repro.models.quantize import quantize_params

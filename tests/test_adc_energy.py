@@ -80,3 +80,50 @@ def test_operating_point_validation():
         OperatingPoint(temp_c=150.0)
     with pytest.raises(ValueError):
         MacroConfig(gain=8.0)
+
+
+# ---------------------------------------------------------------------------
+# single source of truth: energy constants derive from the ADC model
+# ---------------------------------------------------------------------------
+def test_adc_energy_derives_from_ratio_anchor():
+    """E_ADC/(N·E_MAC) = 3.0 at the 7-bit/128-level CAP-RAM anchor must
+    hold by construction — adc_energy_j and _solve_e_mac_ref both read the
+    same core.adc constants, so the identity is exact (rtol 1e-6)."""
+    from repro.core.adc import (ADC_RATIO_E_ADC_OVER_N_E_MAC,
+                                ADC_RATIO_N_ROWS, adc_energy_j)
+    from repro.core.energy import (E_MAC_REF_J, VOLT_REF,
+                                   energy_voltage_scale)
+    cfg = dataclasses.replace(PROTOTYPE, adc_levels=128)
+    # both sides ride the same voltage curve; compare at iso-voltage
+    vs = energy_voltage_scale(cfg.op.vdd) / energy_voltage_scale(VOLT_REF)
+    ratio = adc_energy_j(cfg, dual_threshold=False) \
+        / (ADC_RATIO_N_ROWS * E_MAC_REF_J * vs)
+    np.testing.assert_allclose(ratio, ADC_RATIO_E_ADC_OVER_N_E_MAC,
+                               rtol=1e-6)
+
+
+def test_dual_threshold_gating_single_source():
+    """The gated/ungated conversion-energy ratio IS the shared constant —
+    no hardcoded 0.558 elsewhere can drift from it."""
+    from repro.core.adc import DUAL_THRESHOLD_GATING, adc_energy_j
+    gated = adc_energy_j(PROTOTYPE, dual_threshold=True)
+    ungated = adc_energy_j(PROTOTYPE, dual_threshold=False)
+    np.testing.assert_allclose(gated / ungated, 1.0 - DUAL_THRESHOLD_GATING,
+                               rtol=1e-6)
+
+
+def test_e_mac_ref_derivation_matches_macro_derating():
+    """_solve_e_mac_ref's 256-level de-rating at the 0.65 V anchor comes
+    from MacroConfig.effective_adc_levels, not a literal: re-derive the
+    anchor from the macro model and check the solved constant (rtol 1e-6)."""
+    from repro.core.adc import (ADC_RATIO_E_ADC_OVER_N_E_MAC,
+                                ADC_RATIO_LEVELS, DUAL_THRESHOLD_GATING)
+    from repro.core.energy import E_MAC_REF_J, VOLT_REF
+    m = MacroConfig(op=OperatingPoint(vdd=VOLT_REF))
+    n = m.n_rows
+    adc_factor = ADC_RATIO_E_ADC_OVER_N_E_MAC * n \
+        * (m.effective_adc_levels() / ADC_RATIO_LEVELS) \
+        * (1.0 - DUAL_THRESHOLD_GATING)
+    expect = (2.0 * n / 40.2e12) / (adc_factor + 4.0 * n)
+    np.testing.assert_allclose(E_MAC_REF_J, expect, rtol=1e-6)
+    assert m.effective_adc_levels() == 256        # the low-vdd de-rating

@@ -58,6 +58,12 @@ def _doc(us_decode=400.0, ratio=1.02):
              "derived": "spec_tok_s=2511.6|plain_tok_s=1128.8|"
                         "speedup=2.23x|accept_rate=0.47|"
                         "mean_accept_len=2.87|hist=0:50;1:6;2:7;3:2;4:45"},
+            # schema-v7 energy-pareto row: uniform-vs-mixed serving
+            # energy/token with the precision search's KL-proxy numbers
+            {"name": "energy_pareto_mixed_precision", "us": 2.2e7,
+             "derived": "uniform_pj_tok=26692.7|mixed_pj_tok=18448.8|"
+                        "energy_win=1.447x|kl_uniform=2.2014|"
+                        "kl_mixed=2.2163|kl_budget=0.080|levels=wq:128"},
         ],
     }
 
@@ -95,6 +101,11 @@ def test_extract_metrics():
     # schema-v6 spec-decode serving row
     assert m["spec_speedup"] == pytest.approx(2.23)
     assert m["spec_accept_len"] == pytest.approx(2.87)
+    # schema-v7 energy-pareto row
+    assert m["uniform_pj_tok"] == pytest.approx(26692.7)
+    assert m["mixed_pj_tok"] == pytest.approx(18448.8)
+    assert m["energy_win"] == pytest.approx(1.447)
+    assert m["energy_kl_delta"] == pytest.approx(2.2163 - 2.2014)
 
 
 def test_extract_metrics_tolerates_missing_rows():
@@ -132,9 +143,10 @@ def test_history_append_and_render(tmp_path):
     assert "6.07×" in md                   # v4 tuned-vs-default speedup
     assert "7 vs 1 (7.0×)" in md and "336" in md  # v5 shared-prefix row
     assert "2.23×" in md and "2.87" in md         # v6 spec-decode row
-    # table stays well-formed: every data row has the 17 columns
+    assert "1.45×" in md and "+0.0149" in md      # v7 energy-pareto row
+    # table stays well-formed: every data row has the 20 columns
     rows = [ln for ln in md.splitlines() if ln.startswith("| run-")]
-    assert all(ln.count("|") == 18 for ln in rows)
+    assert all(ln.count("|") == 21 for ln in rows)
 
 
 def test_one_shot_mode(tmp_path):
@@ -144,3 +156,40 @@ def test_one_shot_mode(tmp_path):
     out = tmp_path / "T.md"
     assert bench_trend.main([str(b1), "--out", str(out)]) == 0
     assert "kernel_bench perf trajectory" in out.read_text()
+
+
+def test_pareto_section_from_manifest(tmp_path):
+    """--precision-manifest appends the Pareto section rendered from the
+    deployment manifest; a malformed manifest degrades to no section (the
+    same warn-and-serve-defaults contract as the Server)."""
+    from repro.analysis import precision_search as ps
+    manifest = {
+        "schema": ps.MANIFEST_SCHEMA, "arch": "internlm2-1.8b", "seed": 0,
+        "act_qmax": 15, "base_adc_levels": 362,
+        "default": {"scale": 1.0, "zero_point": 0.0},
+        "sites": {"wq": {"act_scale": 0.5, "act_zero_point": 0.0,
+                         "adc_levels": 128, "scheme": "bp",
+                         "per_channel": None, "k": 64, "m": 8, "calls": 2}},
+        "metrics": {"uniform_pj_per_token": 100.0,
+                    "mixed_pj_per_token": 69.0, "energy_win": 100.0 / 69.0,
+                    "kl_uniform": 1.0, "kl_proxy": 1.05, "kl_budget": 0.08,
+                    "trace": []},
+    }
+    mp = tmp_path / "manifest.json"
+    ps.save_manifest(str(mp), manifest)
+    b1 = tmp_path / "BENCH_ci.json"
+    b1.write_text(json.dumps(_doc()))
+    out = tmp_path / "T.md"
+    assert bench_trend.main([str(b1), "--out", str(out),
+                             "--precision-manifest", str(mp)]) == 0
+    md = out.read_text()
+    assert "Energy/accuracy Pareto" in md
+    assert "uniform 4b×4b BP (362-level ADC)" in md
+    assert "1.449×" in md and "wq=128" in md
+    # malformed manifest: section silently absent, render still succeeds
+    bad = tmp_path / "bad.json"
+    bad.write_text("{not json")
+    with pytest.warns(UserWarning, match="precision manifest"):
+        assert bench_trend.main([str(b1), "--out", str(out),
+                                 "--precision-manifest", str(bad)]) == 0
+    assert "Energy/accuracy Pareto" not in out.read_text()

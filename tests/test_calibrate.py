@@ -119,3 +119,107 @@ def test_server_act_scale_requires_cim(cim_setup):
     with pytest.raises(AssertionError):
         Server(params, float_cfg,
                ServingConfig(n_slots=1, max_len=MAX_LEN, act_scale=0.1))
+
+
+# ---------------------------------------------------------------------------
+# regression: the static-grid mismatch (span counts negatives, zp did not)
+# ---------------------------------------------------------------------------
+def test_static_grid_parity_with_dynamic_on_post_relu():
+    """On non-negative (post-ReLU-like) activations the calibrated static
+    grid must reproduce the dynamic path's codes exactly: lo = 0 → zp = 0
+    and the scales coincide, so static-vs-dynamic is bit-identical."""
+    from repro.analysis.calibrate import _grid
+    x = jnp.asarray([0.0, 0.3, 1.1, 2.9, 3.0])
+    dyn_cfg = ActQuantConfig()
+    s_dyn = act_scale(x, dyn_cfg)
+    q_dyn, zp_dyn = quantize_act(x, s_dyn, dyn_cfg)
+    scale, zp = _grid(0.0, float(jnp.max(x)), dyn_cfg.qmax)
+    st_cfg = ActQuantConfig(static_scale=scale, static_zero_point=zp)
+    q_st, zp_st = quantize_act(x, act_scale(x, st_cfg), st_cfg)
+    assert zp == 0.0 and float(zp_st) == float(zp_dyn) == 0.0
+    assert np.array_equal(np.asarray(q_st), np.asarray(q_dyn))
+
+
+def test_static_grid_bounded_error_on_signed_activations():
+    """Signed activations: the span is measured as max − min(·,0), so a
+    zp=0 static grid (the old behaviour) clips the whole negative tail the
+    calibrated scale reserved range for. With the calibrated zero point the
+    dequantized error is bounded by scale/2 everywhere."""
+    from repro.analysis.calibrate import _grid
+    x = jnp.asarray([-2.0, -0.7, 0.0, 0.9, 2.0])
+    qmax = ActQuantConfig().qmax
+    span = float(jnp.max(x) - jnp.minimum(jnp.min(x), 0.0))   # recorder's
+    scale, zp = _grid(float(jnp.min(x)), span, qmax)
+    assert zp > 0.0
+
+    def dequant_err(cfg):
+        q, z = quantize_act(x, act_scale(x, cfg), cfg)
+        xhat = (q - z) * cfg.static_scale
+        return float(jnp.max(jnp.abs(xhat - x)))
+
+    fixed = dequant_err(ActQuantConfig(static_scale=scale,
+                                       static_zero_point=zp))
+    broken = dequant_err(ActQuantConfig(static_scale=scale))   # old zp=0
+    assert fixed <= scale / 2 + 1e-6          # grid covers the signed range
+    assert broken >= abs(float(jnp.min(x))) - scale  # negatives clipped
+    assert fixed < broken / 3
+
+
+def test_calibrated_zero_point_flows_through_cim_matmul(cim_setup):
+    """End-to-end: calibrating the static grid on the SAME tensor the
+    dynamic path sees must give BIT-PARITY with the dynamic matmul —
+    identical scale, and the calibrated zero point recovers exactly the
+    negative range the dynamic grid covers (the Eq. 7 digital fold). The
+    zp=0 static grid of old clips every negative activation instead and is
+    strictly worse."""
+    cfg, _ = cim_setup
+    from repro.core.cim_matmul import cim_matmul
+    import dataclasses as dc
+    rng = np.random.RandomState(0)
+    # negative-shifted activations: the regime the zp=0 grid clips hardest
+    x = jnp.asarray((rng.randn(4, 24) - 1.0).astype(np.float32))
+    w = jnp.asarray(rng.randn(24, 8).astype(np.float32))
+    ref = np.asarray(x @ w)
+    span = float(jnp.max(x) - jnp.minimum(jnp.min(x), 0.0))
+    from repro.analysis.calibrate import _grid
+    scale, zp = _grid(float(jnp.min(x)), span, cfg.cim.act.qmax)
+
+    def run(static_zp):
+        cim = dc.replace(cfg.cim, act=dc.replace(
+            cfg.cim.act, static_scale=scale, static_zero_point=static_zp))
+        return np.asarray(cim_matmul(x, w, cim))
+
+    y_dyn = np.asarray(cim_matmul(x, w, cfg.cim))       # dynamic grid
+    np.testing.assert_array_equal(run(zp), y_dyn)       # static parity
+    err_fixed = np.abs(run(zp) - ref).max()
+    err_broken = np.abs(run(0.0) - ref).max()           # old zp=0 static
+    assert err_fixed < err_broken
+
+
+# ---------------------------------------------------------------------------
+# regression: vmapped MoE expert matmuls were silently skipped
+# ---------------------------------------------------------------------------
+def test_moe_calibration_records_expert_sites():
+    """The span recorder must see the routed-expert FFN matmuls (they were
+    traced through vmap before — concrete-only recording dropped them
+    silently, so expert weights served on an uncalibrated grid)."""
+    from repro.analysis.calibrate import calibrate_act_tree
+    cfg = SMOKES["qwen2-moe-a2.7b"].replace(
+        dtype="float32", cim=CIMConfig(enabled=True))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg, max_seq=MAX_LEN)
+    tokens = np.arange(8, dtype=np.int32).reshape(1, 8) % cfg.vocab
+    tree = calibrate_act_tree(params, tokens, cfg)
+    assert {"e_gate", "e_up", "e_down"} <= set(tree["sites"])
+    for name in ("e_gate", "e_up", "e_down"):
+        e = tree["sites"][name]
+        assert e["scale"] > 0.0 and e["k"] > 0 and e["rows"] > 0
+
+
+def test_recorder_fails_loudly_on_traced_spans():
+    """A span the recorder cannot capture concretely (a tracer leaking into
+    act_scale under an open recorder) must raise, not silently record
+    nothing — that silence was exactly the MoE bug."""
+    x = jnp.ones((2, 4))
+    with record_act_spans():
+        with pytest.raises(RuntimeError, match="traced activation"):
+            jax.jit(lambda v: act_scale(v, ActQuantConfig()))(x)

@@ -1,0 +1,204 @@
+"""Mixed-precision autotuner: manifest round-trip + fallback discipline,
+per-call-site tree identity (scanned vs unrolled), search determinism, and
+the live ServingConfig → site_overrides dispatch path."""
+import dataclasses
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import precision_search as ps
+from repro.analysis.calibrate import calibrate_act_tree
+from repro.configs.registry import SMOKES
+from repro.core.cim_matmul import CIMConfig, SitePrecision
+from repro.models import registry
+from repro.runtime.server import Request, Server, ServingConfig
+
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def cim_setup():
+    cfg = SMOKES["internlm2-1.8b"].replace(
+        dtype="float32", cim=CIMConfig(enabled=True))
+    params = registry.init_params(jax.random.PRNGKey(0), cfg,
+                                  max_seq=MAX_LEN)
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def cal_tokens():
+    return np.random.RandomState(7).randint(
+        0, SMOKES["internlm2-1.8b"].vocab, size=(2, 16))
+
+
+@pytest.fixture(scope="module")
+def manifest(cim_setup, cal_tokens):
+    cfg, params = cim_setup
+    # one candidate rung + no per-channel retry keeps the module-scoped
+    # search cheap; the full ladder is exercised by benchmarks/kernel_bench
+    return ps.search(params, cal_tokens, cfg, seed=0,
+                     bit_candidates=(7.0,), try_per_channel=False)
+
+
+# ---------------------------------------------------------------------------
+# per-call-site calibration tree
+# ---------------------------------------------------------------------------
+def test_tree_identical_between_scanned_and_unrolled(cim_setup, cal_tokens):
+    """Site keys are weight names (no layer index), and calibration always
+    unrolls — the tree must not depend on the serving cfg's scan setting."""
+    cfg, params = cim_setup
+    t_scan = calibrate_act_tree(params, cal_tokens,
+                                cfg.replace(scan_layers=True))
+    t_unroll = calibrate_act_tree(params, cal_tokens,
+                                  cfg.replace(scan_layers=False))
+    assert t_scan == t_unroll
+    assert set(t_scan["sites"]) == {"wq", "wk", "wv", "wo",
+                                    "w_gate", "w_up", "w_down"}
+
+
+def test_tree_entries_carry_grid_and_traffic(cim_setup, cal_tokens):
+    cfg, params = cim_setup
+    tree = calibrate_act_tree(params, cal_tokens, cfg)
+    n_tok = cal_tokens.size
+    for name, e in tree["sites"].items():
+        assert e["scale"] > 0.0
+        assert 0.0 <= e["zero_point"] <= tree["qmax"]
+        assert e["calls"] == cfg.n_layers       # one call per layer
+        assert e["rows"] == cfg.n_layers * n_tok
+        assert e["k"] > 0 and e["m"] > 0
+    # per-site grids are genuinely tighter than the whole-model default
+    assert min(e["scale"] for e in tree["sites"].values()) \
+        < tree["default"]["scale"]
+
+
+# ---------------------------------------------------------------------------
+# search: determinism + budget honesty
+# ---------------------------------------------------------------------------
+def test_search_deterministic_under_fixed_seed(cim_setup, cal_tokens,
+                                               manifest):
+    cfg, params = cim_setup
+    again = ps.search(params, cal_tokens, cfg, seed=0,
+                      bit_candidates=(7.0,), try_per_channel=False)
+    assert manifest == again
+
+
+def test_search_monotone_energy_and_bounded_proxy(manifest):
+    m = manifest["metrics"]
+    assert m["mixed_pj_per_token"] <= m["uniform_pj_per_token"]
+    assert m["energy_win"] >= 1.0
+    assert m["kl_proxy"] <= m["kl_uniform"] + m["kl_budget"] + 1e-9
+    # every accepted override is coarser than native resolution
+    for step in m["trace"]:
+        assert step["adc_levels"] < manifest["base_adc_levels"]
+
+
+# ---------------------------------------------------------------------------
+# manifest I/O: round-trip + degradation to uniform defaults
+# ---------------------------------------------------------------------------
+def test_manifest_round_trip(tmp_path, manifest):
+    path = str(tmp_path / "man.json")
+    ps.save_manifest(path, manifest)
+    loaded = ps.load_manifest(path, arch=manifest["arch"])
+    assert loaded == manifest
+    ovs = ps.manifest_overrides(loaded)
+    assert dict(ovs).keys() == manifest["sites"].keys()
+    for name, ov in ovs:
+        assert isinstance(ov, SitePrecision)
+        assert ov.act_scale == manifest["sites"][name]["act_scale"]
+
+
+@pytest.mark.parametrize("corrupt", ["missing", "garbage", "schema", "arch"])
+def test_manifest_degrades_to_uniform_defaults(tmp_path, manifest, corrupt):
+    """Mirrors the PR-6 tune-cache fallback: any load problem warns and
+    serves uniform defaults, never raises."""
+    path = str(tmp_path / "man.json")
+    if corrupt == "garbage":
+        with open(path, "w") as f:
+            f.write("{this is not json")
+    elif corrupt == "schema":
+        doc = dict(manifest, schema="pico-ram/precision_manifest/v999")
+        with open(path, "w") as f:
+            json.dump(doc, f)
+    elif corrupt == "arch":
+        ps.save_manifest(path, manifest)
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        loaded = ps.load_manifest(
+            path, arch="some-other-arch" if corrupt == "arch"
+            else manifest["arch"])
+    assert loaded is None
+    assert any("precision manifest" in str(w.message) for w in ws)
+    # and the serving-side application is the identity on None
+    cim = CIMConfig(enabled=True)
+    assert ps.apply_manifest(cim, None) == cim
+
+
+# ---------------------------------------------------------------------------
+# the live dispatch path: ServingConfig(precision_manifest=...) end-to-end
+# ---------------------------------------------------------------------------
+def test_server_consumes_manifest_through_site_overrides(
+        tmp_path, cim_setup, manifest):
+    cfg, params = cim_setup
+    path = str(tmp_path / "man.json")
+    ps.save_manifest(path, manifest)
+    server = Server(params, cfg, ServingConfig(
+        n_slots=2, max_len=MAX_LEN, precision_manifest=path))
+    assert dict(server.cfg.cim.site_overrides).keys() \
+        == manifest["sites"].keys()
+    assert server.cfg.cim.act.static_scale \
+        == pytest.approx(manifest["default"]["act_scale"])
+    r = Request(prompt=[1, 2, 3, 4], max_new_tokens=4)
+    server.submit(r)
+    server.run_until_drained()
+    assert len(r.output) == 4
+
+    # a stale manifest (wrong arch) must still serve — uniform defaults
+    stale = dict(manifest, arch="some-other-arch")
+    ps.save_manifest(path, stale)
+    with warnings.catch_warnings(record=True) as ws:
+        warnings.simplefilter("always")
+        fallback = Server(params, cfg, ServingConfig(
+            n_slots=2, max_len=MAX_LEN, precision_manifest=path))
+    assert any("precision manifest" in str(w.message) for w in ws)
+    assert fallback.cfg.cim.site_overrides == ()
+    r2 = Request(prompt=[1, 2, 3, 4], max_new_tokens=4)
+    fallback.submit(r2)
+    fallback.run_until_drained()
+    assert len(r2.output) == 4
+
+
+def test_site_overrides_change_the_matmul(cim_setup, cal_tokens):
+    """An override with different ADC levels must actually change the site's
+    numerics (proves resolve_site_cfg is on the live path, not dead
+    config)."""
+    cfg, params = cim_setup
+    tree = calibrate_act_tree(params, cal_tokens, cfg)
+    probe = np.random.RandomState(3).randint(0, cfg.vocab, size=(1, 8))
+    mod = registry.get_module(cfg)
+    base = ps._logits(params, probe, ps._probe_cfg(cfg, {}, tree), mod)
+    coarse = ps._logits(params, probe, ps._probe_cfg(
+        cfg, {"w_up": SitePrecision(adc_levels=32, scheme="bp")}, tree), mod)
+    assert not np.allclose(np.asarray(base), np.asarray(coarse))
+
+
+def test_serving_config_validates_zero_point():
+    with pytest.raises(ValueError, match="act_zero_point"):
+        ServingConfig(act_zero_point=3.0)
+
+
+def test_energy_accounting_matches_uniform_closed_form(cim_setup,
+                                                       cal_tokens):
+    """Uniform energy/token from the tree must equal the closed-form sum
+    over sites of e_mvm_j(k)·m·rows / tokens."""
+    from repro.core.energy import mvm_energy
+    cfg, params = cim_setup
+    tree = calibrate_act_tree(params, cal_tokens, cfg)
+    n_tok = cal_tokens.size
+    expect = sum(mvm_energy(cfg.cim.macro, e["k"]).e_mvm_j
+                 * e["m"] * e["rows"] / n_tok
+                 for e in tree["sites"].values())
+    got = ps.energy_per_token_j(tree, cfg, {}, n_tok)
+    assert got == pytest.approx(expect, rel=1e-12)
