@@ -47,6 +47,13 @@ mixed-precision energy win ≥ 1.3x at iso-proxy and uploads the manifest
 (`--precision-manifest`, consumed by serve.py / ServingConfig) as an
 artifact.
 
+Schema v8 adds the SERVE-SLO row: a mixed-prompt workload drained through
+the paged engine twice — telemetry on (runtime.telemetry event trace +
+step snapshots + histograms) vs telemetry off — with a full warm-up drain
+and best-of-N timed repeats per leg. Reports p50/p99 TTFT and ITL from
+the telemetry histograms plus decode tok/s per leg and the telemetry
+overhead percentage; the bench-smoke CI job gates overhead < 3 %.
+
 CLI (the CI bench-smoke job):
     PYTHONPATH=src python -m benchmarks.kernel_bench --small \\
         --autotune --json-out BENCH_ci.json
@@ -68,7 +75,7 @@ from repro.kernels.ref import cim_mvm_ref
 
 from .common import row, timeit
 
-BENCH_SCHEMA = "pico-ram/kernel_bench/v7"  # v7: + energy-pareto row
+BENCH_SCHEMA = "pico-ram/kernel_bench/v8"  # v8: + serve-SLO telemetry row
 
 
 def run(small: bool = False, precision_manifest: str | None = None):
@@ -99,6 +106,7 @@ def run(small: bool = False, precision_manifest: str | None = None):
     out += run_serving_sweep(small)
     out += run_shared_prefix_sweep(small)
     out += run_spec_decode_sweep(small)
+    out += run_serve_slo_sweep(small)
     out += run_energy_pareto(small, manifest_out=precision_manifest)
     return out
 
@@ -491,6 +499,148 @@ def run_spec_decode_sweep(small: bool = False):
         f"speedup={spec_tok_s / max(plain_tok_s, 1e-9):.2f}x|"
         f"accept_rate={m['accept_rate']:.2f}|"
         f"mean_accept_len={m['mean_accept_len']:.2f}|hist={hist}")]
+
+
+def run_serve_slo_sweep(small: bool = False):
+    """Serving SLO percentiles + the telemetry overhead contract.
+
+    One mixed-prompt greedy workload drains through the paged engine in
+    two configurations that differ ONLY in ServingConfig.telemetry: the
+    on-leg populates the runtime.telemetry event trace / step snapshots /
+    TTFT+ITL histograms, the off-leg early-returns at every hook. Each
+    leg warms once un-timed (compiles every step shape), then runs
+    best-of-N timed drains (metrics reset per repeat, repeats
+    interleaved with alternating order so machine-level drift hits both
+    legs equally).
+
+    Reported: p50/p99 TTFT and ITL in ms from the on-leg's histograms
+    (accumulated across the timed repeats — more samples, stabler tails;
+    the warm drain's compile-poisoned samples are reset out), decode
+    tok/s per leg (best-of-N drains), and the overhead percentage the
+    bench-smoke CI job gates < 3 %.
+
+    How the gated overhead is measured — DIRECT ATTRIBUTION, not the
+    on/off throughput difference.  The on-leg's telemetry hooks are
+    wrapped with perf_counter pairs and the gate is the median (across
+    repeats) of ``time inside hooks / total step() wall``.  Rationale,
+    from calibrating on shared CI-class hosts: the differential
+    estimate is swamped by noise the hooks don't cause.  Two servers
+    built identically WITH TELEMETRY OFF measure 1-2 % apart with
+    persistent per-step-index wall differences of +-10 % (each instance
+    jits its own step functions, so code/memory placement differs), and
+    noisy-neighbor steal adds multi-percent swings that survive
+    interleaving, per-step-index min-pairing over dozens of repeats,
+    and median-of-phases — while the true hook cost is ~1 % of a step.
+    A hard gate on a differential below its own noise floor flakes; the
+    attributed fraction is a within-run ratio, so host slowdowns scale
+    numerator and denominator together.  It is also conservative where
+    it matters: each wrapped call pays the timer overhead inside the
+    numerator, and a regression that fattens the hooks (say,
+    reintroducing per-lane ring appends on the decode path) lands on it
+    directly.  What it cannot see is indirect cost (GC pressure from
+    ring allocations, cache pollution), so the on/off tok/s pair stays
+    in the derived field as the end-to-end cross-check: tok_s_on within
+    noise of tok_s_off is the claim a human should eyeball, and both
+    numbers are best-of-N under one-sided noise (a neighbor only ever
+    slows a run down).
+
+    The gated fraction is the telemetry HOT phase: Telemetry's hooks
+    append raw tuples and defer aggregation (Event/ring/histogram work)
+    to a replay pass that runs at read time, outside the step walls —
+    see the Telemetry class docstring.  The replay cost is real but
+    off-SLO-path by design; the TTFT/ITL percentiles above come from
+    the same drains and would show it if it leaked into serving.
+    """
+    import time
+
+    from repro.configs.registry import SMOKES
+    from repro.models import registry as model_registry
+    from repro.runtime.server import Request, Server, ServingConfig
+
+    import numpy as np
+    cfg = SMOKES["internlm2-1.8b"].replace(dtype="float32")
+    n_slots, max_len, block = (4, 64, 8) if small else (8, 128, 16)
+    n_req, max_new = (6, 8) if small else (12, 16)
+    # drains are tens of ms; lots of interleaved repeats cost little and
+    # best-of-N converges on true capability under one-sided timing noise
+    # (CI neighbors only ever make a run SLOWER)
+    repeats = 9 if small else 5
+    rng = np.random.RandomState(29)
+    prompts = [rng.randint(0, cfg.vocab,
+                           size=int(rng.randint(4, max_len // 4))).tolist()
+               for _ in range(n_req)]
+    params = model_registry.init_params(jax.random.PRNGKey(0), cfg,
+                                        max_seq=max_len)
+
+    def build(telemetry_on: bool) -> Server:
+        return Server(params, cfg, ServingConfig(
+            n_slots=n_slots, max_len=max_len, paged=True, block_size=block,
+            prefill_chunk=max_len // 8, attn="exact",
+            telemetry=telemetry_on))
+
+    # every recording entry point the Server calls (event() is the shared
+    # internal path of several of these — wrapping it too would double
+    # count); telemetry.now() is deliberately unwrapped, both legs pay it
+    hooks = ("submit", "admit", "prefill_chunk", "first_token", "emission",
+             "decode_step", "spec_verify", "cow_fork", "preempt", "retire",
+             "step_snapshot")
+
+    def instrument(tel) -> list:
+        """Shadow each hook on the INSTANCE with a self-timing wrapper."""
+        acc = [0.0]
+        for name in hooks:
+            base = getattr(tel, name)
+
+            def timed(*a, _base=base, _acc=acc, **kw):
+                t0 = time.perf_counter()
+                r = _base(*a, **kw)
+                _acc[0] += time.perf_counter() - t0
+                return r
+
+            setattr(tel, name, timed)
+        return acc
+
+    def once(srv: Server) -> tuple:
+        srv.metrics = type(srv.metrics)()       # timed repeats start clean
+        for p in prompts:
+            srv.submit(Request(prompt=list(p), max_new_tokens=max_new))
+        wall = 0.0
+        while any(srv.slot_req) or srv.queue:   # run_until_drained, but
+            t0 = time.perf_counter()            # timing each step() wall
+            srv.step()
+            wall += time.perf_counter() - t0
+        return srv.metrics.summary()["decode_tok_s"], wall
+
+    srv_on, srv_off = build(True), build(False)
+    hook_s = instrument(srv_on.telemetry)
+    once(srv_on)                                # warm: compile every shape
+    once(srv_off)
+    srv_on.telemetry.reset()                    # drop compile-poisoned TTFTs
+    tok_s_on = tok_s_off = 0.0
+    ratios = []                                 # per-drain hook_s / step wall
+    for r in range(repeats):        # interleave, alternate leg order — see
+        legs = ("on", "off") if r % 2 == 0 else ("off", "on")   # docstring
+        for leg in legs:
+            if leg == "on":
+                hook_s[0] = 0.0
+                tok, wall = once(srv_on)
+                tok_s_on = max(tok_s_on, tok)
+                ratios.append(hook_s[0] / wall)
+            else:
+                tok, _ = once(srv_off)
+                tok_s_off = max(tok_s_off, tok)
+    overhead = sorted(ratios)[len(ratios) // 2] * 100.0
+    tel = srv_on.telemetry
+    m = srv_on.metrics.summary()
+    return [row(
+        f"serve_slo_paged_s{n_slots}_r{n_req}",
+        m["wall_s"] * 1e6 / max(m["decode_tokens"], 1),
+        f"ttft_p50_ms={tel.ttft.percentile(50) * 1e3:.2f}|"
+        f"ttft_p99_ms={tel.ttft.percentile(99) * 1e3:.2f}|"
+        f"itl_p50_ms={tel.itl.percentile(50) * 1e3:.2f}|"
+        f"itl_p99_ms={tel.itl.percentile(99) * 1e3:.2f}|"
+        f"tok_s_on={tok_s_on:.1f}|tok_s_off={tok_s_off:.1f}|"
+        f"overhead_pct={overhead:+.2f}")]
 
 
 def run_autotune(small: bool = False):

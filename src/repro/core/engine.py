@@ -548,6 +548,41 @@ def _sharded_mvm(spec: BackendSpec, x_codes, weights, cfg, *, key, inl_seed,
 # ---------------------------------------------------------------------------
 # the single entry point
 # ---------------------------------------------------------------------------
+_ENERGY_CACHE: dict = {}    # (macro, k) -> e_mvm_j, see _record_dispatch
+
+
+def _record_dispatch(name: str, x_codes, weights, macro) -> None:
+    """Observability hook: count the backend pick and accumulate the
+    paper-model CIM energy for this MVM under the active PR-9 site name.
+
+    Runs at jax TRACE time (execute_mvm executes Python once per compiled
+    shape under jit), so KERNEL_COUNTERS records traced calls — one per
+    compilation, not one per step; see telemetry.KernelCounters. Energy is
+    Eq. 4 per K-deep dot product (energy.mvm_energy) times the traced
+    call's dot count (batch rows x output columns)."""
+    from repro.core.quant import current_site
+    from repro.runtime.telemetry import KERNEL_COUNTERS
+    KERNEL_COUNTERS.count_backend(name)
+    if isinstance(weights, PackedCodes):
+        k, m = weights.k, int(weights.data.shape[-1])
+    else:
+        k, m = int(weights.shape[-2]), int(weights.shape[-1])
+    rows = 1
+    for d in x_codes.shape[:-1]:
+        rows *= int(d)
+    key = (macro, k)
+    e_dot = _ENERGY_CACHE.get(key)
+    if e_dot is None:
+        try:
+            from repro.core.energy import mvm_energy
+            e_dot = mvm_energy(macro, k).e_mvm_j
+        except Exception:
+            e_dot = 0.0   # energy model inapplicable — still count dots
+        _ENERGY_CACHE[key] = e_dot
+    KERNEL_COUNTERS.add_site_energy(current_site() or "<unsited>",
+                                    e_dot * rows * m, rows * m)
+
+
 def execute_mvm(x_codes: jax.Array, weights, cfg, *,
                 s_x: jax.Array, s_w: jax.Array | None, x_zero_point: jax.Array,
                 key: jax.Array | None = None, inl_seed: int = 0,
@@ -582,6 +617,7 @@ def execute_mvm(x_codes: jax.Array, weights, cfg, *,
         # thread a distinct inl_seed per layer/step to decorrelate them.
         key = jax.random.fold_in(jax.random.PRNGKey(noise_seed), inl_seed)
     name = backend or choose_backend(cfg, x_codes, weights)
+    _record_dispatch(name, x_codes, weights, macro)
     spec = get_backend(name)
     if macro.scheme not in spec.schemes:
         raise ValueError(f"backend {name!r} does not implement scheme "

@@ -120,6 +120,8 @@ def load_cache(path: str | None = None) -> dict:
         entries = {str(k): v for k, v in raw.items()
                    if isinstance(v, dict)}
     except (OSError, ValueError) as e:
+        from repro.runtime.telemetry import KERNEL_COUNTERS
+        KERNEL_COUNTERS.count_fallback()
         warnings.warn(f"ignoring tune cache {path!r}: {e}", stacklevel=2)
         entries = {}
     _STATE["key"] = key

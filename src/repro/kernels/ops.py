@@ -83,7 +83,11 @@ def _resolve_tiles(x_codes, n: int, n_rows: int,
         m *= d
     tuned = autotune.lookup(
         "cim_mvm", autotune.mvm_family(m, -(-k // n_rows), n),
-        backend="pallas") or {}
+        backend="pallas")
+    if autotune.cache_path():
+        from repro.runtime.telemetry import KERNEL_COUNTERS
+        KERNEL_COUNTERS.tune_lookup("cim_mvm", hit=tuned is not None)
+    tuned = tuned or {}
     if bm is None:
         bm = int(tuned.get("bm", 128) or 128)
     if bn is None:

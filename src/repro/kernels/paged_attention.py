@@ -74,6 +74,7 @@ from jax.experimental.pallas import tpu as pltpu
 from jax.sharding import PartitionSpec
 
 from repro.parallel import sharding
+from repro.runtime.telemetry import KERNEL_COUNTERS
 
 # jax renamed TPUCompilerParams → CompilerParams across 0.4.x/0.5.x (same
 # shim as kernels/cim_mvm.py) — support both toolchains.
@@ -322,6 +323,8 @@ def _resolve_attn_config(*, window: int, c: int, mb: int, cg: int):
     cfg = autotune.lookup("paged_attn",
                           autotune.attn_family(window, c),
                           backend="kernel")
+    if autotune.cache_path():
+        KERNEL_COUNTERS.tune_lookup("paged_attn", hit=cfg is not None)
     kblocks = 1
     row_tile = None
     if cfg:
@@ -504,6 +507,9 @@ def paged_attention(q, k_pool, v_pool, tables, *, positions, kv_len,
     over "model".
     """
     name = choose_attn_backend(backend)
+    # trace-time dispatch counter (one count per compiled shape, not per
+    # executed step — see telemetry.KernelCounters)
+    KERNEL_COUNTERS.count_attn(name)
     spec = get_attn_backend(name)
     mesh = sharding.get_mesh()
     if not (spec.pallas and mesh is not None

@@ -40,6 +40,16 @@
   PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke \
       --paged --cim bp --precision-manifest precision_manifest.json
 
+  # telemetry export (runtime.telemetry / runtime.obs): Perfetto-loadable
+  # Chrome trace (one track per slot + a scheduler track), Prometheus
+  # text snapshot, JSONL event log; --arrival poisson replaces the
+  # submit-all-at-once burst with seeded exponential inter-arrival gaps.
+  # --arch defaults to internlm2-1.8b --smoke, so the minimal invocation is:
+  PYTHONPATH=src python -m repro.launch.serve --paged \
+      --trace-out trace.json --metrics-out metrics.prom \
+      [--events-out events.jsonl] \
+      [--arrival poisson --arrival-rate 8 --arrival-seed 0]
+
   REPRO_SERVE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --arch internlm2-1.8b --smoke --cim bp-noisy --mesh host [--paged]
       # EXECUTES (not just compiles) the shard_map-wrapped fused stochastic
@@ -73,8 +83,16 @@ from repro.runtime.speculative import SamplingParams
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
-    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--arch", choices=sorted(ARCHS),
+                    default="internlm2-1.8b",
+                    help="model architecture (default internlm2-1.8b so "
+                         "the bare telemetry invocation works)")
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="use the smoke-scale config (default on; "
+                         "--full for the real geometry)")
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="use the full ARCHS config instead of the smoke "
+                         "scale")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
@@ -173,6 +191,30 @@ def main():
                          "— on a mesh (--mesh host) the engine wraps it in "
                          "shard_map, so sharded serving no longer falls "
                          "back to the jnp scan backend")
+    ap.add_argument("--arrival", choices=("batch", "poisson"),
+                    default="batch",
+                    help="request arrival process: batch = submit all up "
+                         "front (the historical behavior), poisson = "
+                         "seeded exponential inter-arrival gaps paced in "
+                         "real time — the seed of the ROADMAP traffic "
+                         "harness, so the SLO numbers see bursty "
+                         "admission instead of one burst")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="mean requests/s for --arrival poisson")
+    ap.add_argument("--arrival-seed", type=int, default=0,
+                    help="numpy RNG seed for the arrival gaps "
+                         "(deterministic schedule per seed)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the request "
+                         "lifecycle + scheduler steps — drag it into "
+                         "https://ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write a Prometheus text-exposition snapshot "
+                         "(TTFT/ITL/accept-length/step-wall histograms, "
+                         "event + kernel counters, pool gauges)")
+    ap.add_argument("--events-out", default=None, metavar="PATH",
+                    help="write the raw structured event log + step "
+                         "snapshots as JSONL")
     ap.add_argument("--mesh", choices=("none", "host"), default="none",
                     help="host = shard serving over a data×model mesh of "
                          "the available host devices (set "
@@ -238,19 +280,42 @@ def main():
 
     rng = np.random.RandomState(0)
     reqs = []
+    for i in range(args.requests):
+        plen = int(rng.randint(4, 17))
+        prompt = rng.randint(0, cfg.vocab, size=plen).tolist()
+        reqs.append(Request(prompt=prompt, max_new_tokens=args.max_new,
+                            n_samples=args.n_samples,
+                            sampling=SamplingParams(
+                                temperature=args.temperature,
+                                top_k=args.top_k,
+                                seed=args.sample_seed + i)))
+    due = None
+    if args.arrival == "poisson":
+        arr_rng = np.random.RandomState(args.arrival_seed)
+        gaps = arr_rng.exponential(1.0 / max(args.arrival_rate, 1e-9),
+                                   size=len(reqs))
+        due = np.cumsum(gaps)
+        print(f"arrival=poisson rate={args.arrival_rate}/s "
+              f"seed={args.arrival_seed} span={due[-1]:.2f}s")
     t0 = time.monotonic()
     with mesh_ctx:
-        for i in range(args.requests):
-            plen = int(rng.randint(4, 17))
-            prompt = rng.randint(0, cfg.vocab, size=plen).tolist()
-            r = Request(prompt=prompt, max_new_tokens=args.max_new,
-                        n_samples=args.n_samples,
-                        sampling=SamplingParams(
-                            temperature=args.temperature,
-                            top_k=args.top_k,
-                            seed=args.sample_seed + i))
-            server.submit(r)
-            reqs.append(r)
+        if due is None:
+            for r in reqs:
+                server.submit(r)
+        else:
+            # real-time pacing: submit each request at its arrival time;
+            # step the server while waiting so in-flight lanes keep
+            # decoding between arrivals (idle gaps just sleep)
+            i = 0
+            while i < len(reqs):
+                now = time.monotonic() - t0
+                if now >= due[i]:
+                    server.submit(reqs[i])
+                    i += 1
+                elif any(r is not None for r in server.slot_req):
+                    server.step()
+                else:
+                    time.sleep(min(float(due[i]) - now, 0.002))
         server.run_until_drained()
     dt = time.monotonic() - t0
     done = [s for r in reqs for s in (r, *r.samples)]
@@ -290,6 +355,31 @@ def main():
                   f"accept_rate={m['accept_rate']:.2f} "
                   f"mean_accept_len={m['mean_accept_len']:.2f} "
                   f"accept_hist=[{hist}]")
+
+    tel = server.telemetry
+    if tel.enabled and tel.ttft.n:
+        print(f"slo: ttft p50={tel.ttft.percentile(50) * 1e3:.1f}ms "
+              f"p99={tel.ttft.percentile(99) * 1e3:.1f}ms | "
+              f"itl p50={tel.itl.percentile(50) * 1e3:.1f}ms "
+              f"p99={tel.itl.percentile(99) * 1e3:.1f}ms | "
+              f"step_wall p50={tel.step_wall.percentile(50) * 1e3:.1f}ms")
+    if args.trace_out or args.metrics_out or args.events_out:
+        import json
+        from repro.runtime import obs
+        if args.trace_out:
+            doc = obs.chrome_trace(tel)
+            with open(args.trace_out, "w") as f:
+                json.dump(doc, f)
+            print(f"wrote {args.trace_out} "
+                  f"({len(doc['traceEvents'])} trace events) — load at "
+                  f"https://ui.perfetto.dev")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                f.write(obs.prometheus_text(tel, server))
+            print(f"wrote {args.metrics_out}")
+        if args.events_out:
+            n = obs.write_events_jsonl(tel, args.events_out)
+            print(f"wrote {args.events_out} ({n} lines)")
 
 
 if __name__ == "__main__":

@@ -191,6 +191,13 @@ class PrefixTrie:
     def owns(self, block: int) -> bool:
         return block in self._by_block
 
+    def cached_cold(self, alloc: BlockAllocator) -> int:
+        """Blocks whose ONLY holder is the trie (refcount == 1): the cold
+        prefix cache. Unlike evictable() this ignores subtree structure —
+        it answers "how much of the pool is cache, not live state", the
+        composition split telemetry and ServerMetrics.to_dict expose."""
+        return sum(1 for b in self._by_block if alloc.refcount(b) == 1)
+
     def evictable(self, alloc: BlockAllocator) -> int:
         """Blocks evict() could free right now: nodes whose block has no
         holder besides the trie AND whose whole subtree is likewise free

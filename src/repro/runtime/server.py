@@ -120,7 +120,6 @@ determinism.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Optional
 
 import jax
@@ -132,6 +131,7 @@ from repro.models import registry
 from repro.runtime.paging import BlockAllocator, PrefixTrie, SlotTables
 from repro.runtime.speculative import SamplingParams, make_drafter, \
     parse_drafter, sample_token, verify_token
+from repro.runtime.telemetry import Telemetry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -164,7 +164,10 @@ class ServingConfig:
     the prefix cache exceeds it, an LRU sweep drains it to half that, so
     long-lived servers stop pinning the whole pool in cold cache between
     bursts (None disables; eviction then happens only under admission
-    pressure).
+    pressure). Observability: `telemetry` enables the per-request event
+    trace / step snapshots / latency histograms (runtime.telemetry) —
+    disable it only to measure its own overhead; the injectable-clock
+    Server(telemetry=...) keyword overrides this flag entirely.
     """
     n_slots: int = 4
     max_len: int = 128
@@ -184,6 +187,7 @@ class ServingConfig:
     drafter: str = "off"
     spec_k: int = 4
     trie_watermark: Optional[float] = None
+    telemetry: bool = True
 
     def __post_init__(self):
         if self.n_slots < 1:
@@ -302,6 +306,10 @@ class ServerMetrics:
     #                             lanes can transiently exceed what the pool
     #                             sustains; decode lanes cannot)
     wall_s: float = 0.0       # time inside step() + admission-time prefill
+    # pool composition sampled at the end of each paged step (and at
+    # construction): blocks_total/free/shared/cached_cold/private +
+    # trie_entries — see Server._pool_stats for the split semantics
+    pool: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> dict:
         w = max(self.wall_s, 1e-9)
@@ -331,10 +339,17 @@ class ServerMetrics:
                 "peak_decode_lanes": self.peak_decode_lanes,
                 "wall_s": self.wall_s}
 
+    def to_dict(self) -> dict:
+        """summary() plus the KV-pool composition (shared / private /
+        cached-cold block split and prefix-trie entry count) — the
+        post-run view the preemption soaks and exporters assert on."""
+        return {**self.summary(), **self.pool}
+
 
 class Server:
     def __init__(self, params, cfg: ModelConfig,
-                 serving: ServingConfig | None = None, **legacy):
+                 serving: ServingConfig | None = None, *,
+                 telemetry: Telemetry | None = None, **legacy):
         if legacy:
             # the PR-7 one-release DeprecationWarning shim is retired:
             # keyword construction fails loudly with the migration target
@@ -345,6 +360,11 @@ class Server:
         if serving is None:
             serving = ServingConfig()
         self.serving = serving
+        # the telemetry sink is injectable (tests pass a fake clock); a
+        # caller-provided instance wins over the ServingConfig.telemetry
+        # on/off flag
+        self.telemetry = telemetry if telemetry is not None \
+            else Telemetry(enabled=serving.telemetry)
         cfg = cfg.replace(attn_backend=serving.attn)
         if serving.act_scale is not None:
             assert cfg.cim.enabled, "static act_scale needs cim.enabled"
@@ -432,6 +452,8 @@ class Server:
             self._fork_children: dict[int, list[Request]] = {}
             self._fork_ready: dict[int, dict] = {}
             self._rr = 0   # round-robin offset for budget-capped decode
+            self._preempted_rids: set[int] = set()
+            self.metrics.pool = self._pool_stats()
         else:
             self.slot_len = np.zeros(self.n_slots, np.int32)
             self.cache = jax.jit(
@@ -477,8 +499,10 @@ class Server:
             raise ValueError("parallel sampling (n_samples > 1) needs the "
                              "paged engine")
         req.rid = self._next_rid
-        req.t_submit = time.monotonic()
+        req.t_submit = self.telemetry.now()
         self._next_rid += 1
+        self.telemetry.submit(req.rid, req.t_submit, len(req.prompt),
+                              req.n_samples)
         if self.paged and req.n_samples > 1:
             kids = []
             for i in range(req.n_samples - 1):
@@ -493,15 +517,16 @@ class Server:
                 c.rid = self._next_rid
                 self._next_rid += 1
                 c.t_submit = req.t_submit
+                self.telemetry.submit(c.rid, c.t_submit, len(c.prompt), 1)
                 kids.append(c)
             req.samples = list(kids)
             self._fork_children[req.rid] = kids
         self.queue.append(req)
         # admission work (incl. the legacy engine's per-request prefill)
         # counts toward wall_s so both engines' tok/s share one clock
-        t0 = time.monotonic()
+        t0 = self.telemetry.now()
         self._admit()
-        self.metrics.wall_s += time.monotonic() - t0
+        self.metrics.wall_s += self.telemetry.now() - t0
         return req.rid
 
     def _admit(self):
@@ -520,7 +545,15 @@ class Server:
         first = sample_token(np.asarray(logits[0]), req.sampling,
                              len(req.output))
         req.output.append(first)
-        req.t_first = time.monotonic()
+        req.t_first = self.telemetry.now()
+        self.telemetry.admit(req.rid, slot, req.t_first,
+                             prefix_hit_blocks=0,
+                             prefill_tokens=len(req.prompt))
+        self.telemetry.prefill_chunk(req.rid, slot, req.t_first,
+                                     len(req.prompt), len(req.prompt),
+                                     len(req.prompt))
+        self.telemetry.first_token(req.rid, slot, req.t_first,
+                                   req.t_submit)
         self.metrics.prefill_tokens += len(req.prompt)
         self.slot_req[slot] = req
         self.slot_len[slot] = len(req.prompt)
@@ -529,7 +562,7 @@ class Server:
     # -- decode loop ----------------------------------------------------------
     def step(self):
         """One serving step; retires finished requests and re-admits."""
-        t0 = time.monotonic()
+        t0 = self.telemetry.now()
         if self.paged:
             self._step_paged()
             # trie capacity policy: the watermark sweep runs every step —
@@ -540,7 +573,7 @@ class Server:
                     self.alloc, self._trie_hi, self._trie_lo)
         else:
             self._step_slots()
-        self.metrics.wall_s += time.monotonic() - t0
+        self.metrics.wall_s += self.telemetry.now() - t0
 
     def _step_slots(self):
         """Legacy engine: one decode step for all slots."""
@@ -557,16 +590,21 @@ class Server:
         logits, self.cache = self._decode(self.params, jnp.asarray(toks),
                                           self.cache)
         rows = np.asarray(logits)
+        now = self.telemetry.now()
         for s in active:
             req = self.slot_req[s]
             nxt = sample_token(rows[s], req.sampling, len(req.output))
             req.output.append(nxt)
             self.metrics.decode_tokens += 1
+            self.telemetry.emission(req.rid, s, now)
             exhausted = len(req.output) >= req.max_new_tokens
             hit_eos = req.eos_id is not None and nxt == req.eos_id
             if exhausted or hit_eos or pos + 1 >= self.max_len - 1:
                 req.done = True
-                req.t_done = time.monotonic()
+                req.t_done = now
+                self.telemetry.retire(req.rid, s, now,
+                                      tokens=len(req.output),
+                                      latency_s=req.latency_s)
                 self.slot_req[s] = None
                 self.slot_len[s] = 0
         self.steps_run += 1
@@ -625,6 +663,15 @@ class Server:
                     len(matched) * self.block_size
             self._pf_src[slot] = eff
             self._pf_done[slot] = len(matched) * self.block_size
+            # a previously-preempted rid re-admitting is a resume (even if
+            # it was preempted mid-prefill, before emitting anything)
+            resume = req.rid in self._preempted_rids
+            self._preempted_rids.discard(req.rid)
+            self.telemetry.admit(
+                req.rid, slot, self.telemetry.now(),
+                prefix_hit_blocks=len(matched),
+                prefill_tokens=len(eff) - len(matched) * self.block_size,
+                resume=resume)
 
     def _install_fork(self, slot: int, req: Request):
         info = self._fork_ready.pop(req.rid)
@@ -635,9 +682,13 @@ class Server:
         self._pf_src[slot] = []          # nothing to prefill: pure decode
         self._pf_done[slot] = 0
         req.output = list(info["output"])
-        now = time.monotonic()
+        now = self.telemetry.now()
+        self.telemetry.admit(req.rid, slot, now,
+                             prefix_hit_blocks=len(info["blocks"]),
+                             prefill_tokens=0, fork=True)
         if not req.t_first:
             req.t_first = now
+            self.telemetry.first_token(req.rid, slot, now, req.t_submit)
         self.metrics.prefix_hit_tokens += info["lens"]
         if (len(req.output) >= req.max_new_tokens
                 or (req.eos_id is not None
@@ -697,6 +748,7 @@ class Server:
     def _step_paged(self):
         if not any(r is not None for r in self.slot_req):
             return
+        t_begin = self.telemetry.now()
         # plan the step; preempt the newest-admitted lane while the pool
         # cannot back every write (evictable trie entries count as room —
         # they are freed below, before acquiring)
@@ -738,6 +790,8 @@ class Server:
                                    jnp.asarray(nb, jnp.int32))
             self.tables.replace(s, j, nb, self.alloc)
             self.metrics.cow_forks += 1
+            self.telemetry.cow_fork(self.slot_req[s].rid, s,
+                                    self.telemetry.now(), b, nb)
         for s, v in valid_map.items():
             if v:
                 self.tables.grow(s, int(self.tables.lens[s]) + v,
@@ -772,8 +826,10 @@ class Server:
             jnp.asarray(self.tables.tables), jnp.asarray(self.tables.lens),
             jnp.asarray(valid))
         rows = np.asarray(logits)               # [B, V] or [B, C, V]
-        now = time.monotonic()
-        for s in active:
+        now = self.telemetry.now()
+        dec_lanes: list = []                    # plain-decode emissions this
+        retires: list = []                      # step, batched into ONE ring
+        for s in active:                        # event after the lane loop
             if not valid[s]:
                 continue
             req = self.slot_req[s]
@@ -781,6 +837,9 @@ class Server:
                 self.tables.lens[s] += int(valid[s])
                 self._pf_done[s] += int(valid[s])
                 self.metrics.prefill_tokens += int(valid[s])
+                self.telemetry.prefill_chunk(req.rid, s, now, int(valid[s]),
+                                             int(self._pf_done[s]),
+                                             len(self._pf_src[s]))
                 if self._pf_done[s] == len(self._pf_src[s]):
                     row = rows[s, int(valid[s]) - 1] if rows.ndim == 3 \
                         else rows[s]
@@ -791,6 +850,12 @@ class Server:
                         sample_token(row, req.sampling, len(req.output)))
                     if not req.t_first:
                         req.t_first = now
+                        self.telemetry.first_token(req.rid, s, now,
+                                                   req.t_submit)
+                    else:
+                        # resume completion re-emits a token: the ITL
+                        # sample spans the preemption gap on purpose
+                        self.telemetry.emission(req.rid, s, now)
                     self._register_prefix(s)
                     self._stash_forks(s)
                     # one-at-a-time semantics: exhaustion AND EOS apply to
@@ -809,13 +874,37 @@ class Server:
             nxt = sample_token(row, req.sampling, len(req.output))
             req.output.append(nxt)
             self.metrics.decode_tokens += 1
+            dec_lanes.append((req.rid, s))
             exhausted = len(req.output) >= req.max_new_tokens
             hit_eos = req.eos_id is not None and nxt == req.eos_id
             full = int(self.tables.lens[s]) + 1 >= self.max_len - 1
             if exhausted or hit_eos or full:
-                self._retire_paged(s, now)
+                retires.append(s)
+        # one batched decode event for the whole step's plain emissions
+        # (per-lane ITL samples are still recorded inside), THEN the
+        # retires so each rid's ring ends with its retire event
+        self.telemetry.decode_step(dec_lanes, now)
+        for s in retires:
+            self._retire_paged(s, now)
         self.steps_run += 1
         self.metrics.steps += 1
+        # sample pool composition + scheduler state once per step; the
+        # pool dict also lands on ServerMetrics so to_dict() reflects the
+        # post-run split even with telemetry disabled
+        t_end = self.telemetry.now()
+        pool = self._pool_stats()
+        self.metrics.pool = pool
+        # positional on purpose (field order == StepSnapshot): the 16-kwarg
+        # binding was the most expensive part of the per-step telemetry
+        # call and both legs pay it before the enabled check
+        self.telemetry.step_snapshot(
+            self.steps_run, t_end, t_end - t_begin,             # step/t/wall
+            len(active), len(decode_lanes), len(takes),         # lane mix
+            len(spec), c, bool(spec),                           # shape
+            int(valid.sum()), self.token_budget,                # budget
+            pool["blocks_free"], pool["blocks_private"],        # pool split
+            pool["blocks_shared"], pool["blocks_cached_cold"],
+            pool["trie_entries"])
         self._admit()
 
     def _plan_spec(self, decode_lanes) -> dict[int, list[int]]:
@@ -888,6 +977,9 @@ class Server:
         self.metrics.draft_accepted += matched
         self.metrics.accept_hist[matched] = \
             self.metrics.accept_hist.get(matched, 0) + 1
+        self.telemetry.spec_verify(req.rid, s, now, drafted=len(drafts),
+                                   accepted=matched, emitted=emitted)
+        self.telemetry.emission(req.rid, s, now, tokens=emitted)
         # rollback-by-truncation: the committed K/V covers the fed prev
         # token plus the matched drafts; everything past that is garbage
         self.tables.lens[s] = lens0 + 1 + matched
@@ -941,11 +1033,16 @@ class Server:
         self._pf_done[slot] = 0
         self.queue.insert(0, req)
         self.metrics.preemptions += 1
+        self._preempted_rids.add(req.rid)
+        self.telemetry.preempt(req.rid, slot, self.telemetry.now(),
+                               tokens_done=len(req.output))
 
     def _retire_paged(self, slot: int, now: float):
         req = self.slot_req[slot]
         req.done = True
         req.t_done = now
+        self.telemetry.retire(req.rid, slot, now, tokens=len(req.output),
+                              latency_s=req.latency_s)
         self.tables.release(slot, self.alloc)
         self.slot_req[slot] = None
         self._pf_src[slot] = None
@@ -967,6 +1064,26 @@ class Server:
                 raise RuntimeError("serving loop did not drain")
 
     # -- capacity / reporting -------------------------------------------------
+    def _pool_stats(self) -> dict:
+        """KV-pool composition split (paged engine only).
+
+        `blocks_shared` counts refcount >= 2 blocks (live prefix sharing /
+        fork reuse), `blocks_cached_cold` counts blocks whose ONLY
+        reference is the trie (evictable cold prefix cache), and
+        `blocks_private` is the remainder of in-use blocks — held by
+        exactly one live lane. shared + cached_cold + private + free ==
+        blocks_total."""
+        st = self.alloc.stats
+        cold = self.trie.cached_cold(self.alloc) \
+            if self.trie is not None else 0
+        return {"blocks_total": st.num_blocks,
+                "blocks_free": st.free,
+                "blocks_shared": st.shared,
+                "blocks_cached_cold": cold,
+                "blocks_private": st.private - cold,
+                "trie_entries": self.trie.cached_blocks
+                if self.trie is not None else 0}
+
     def flush_prefix_cache(self) -> int:
         """Drop every trie entry; blocks still mapped by a live slot just
         lose their cache ref. Returns blocks freed to the pool."""

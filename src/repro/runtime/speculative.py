@@ -46,6 +46,8 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.runtime.telemetry import KERNEL_COUNTERS
+
 
 # ---------------------------------------------------------------------------
 # per-request sampling policy
@@ -244,7 +246,9 @@ class NGramDrafter:
             suffix = tuple(work[-n:])
             for i in range(top - n, -1, -1):
                 if tuple(work[i:i + n]) == suffix:
+                    KERNEL_COUNTERS.count_drafter("ngram_match")
                     return int(work[i + n])
+        KERNEL_COUNTERS.count_drafter("ngram_fallback")
         return int(work[-1])
 
     def propose(self, tokens: Sequence[int], k: int) -> list[int]:
